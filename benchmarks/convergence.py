@@ -1,0 +1,42 @@
+"""Paper Fig. 2 — convergence comparison (reward vs. episode).
+
+Trains MADDPG-MATO, MADDPG-NoModel and SADDPG on the reference setting
+(K=3 models, M=10 EDs, N=3 ESs) and reports smoothed per-episode rewards.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def smooth(x, w=20):
+    if len(x) < w:
+        return x
+    return np.convolve(x, np.ones(w) / w, mode="valid")
+
+
+def run(k: int = 3, m: int = 10, seed: int = 0) -> dict:
+    out = {}
+    for algo in common.LEARNED:
+        cell = common.run_cell(algo, k, m, seed)
+        out[algo] = cell
+    return out
+
+
+def main():
+    res = run()
+    print("# Fig.2 convergence — smoothed episode reward (sum over agents)")
+    print("algo,episode,reward")
+    for algo, cell in res.items():
+        curve = smooth(np.asarray(cell["episode_reward"]))
+        for i in range(0, len(curve), max(1, len(curve) // 25)):
+            print(f"{algo},{i},{curve[i]:.2f}")
+    print("\n# converged (last-20-episode mean)")
+    for algo, cell in res.items():
+        tail = np.asarray(cell["episode_reward"])[-20:].mean()
+        print(f"{algo},converged_reward,{tail:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Fig. 4 — performance vs. number of EDs (M = 5..20).
+
+Checks the §IV.C.2 claim: with 20 EDs MADDPG-MATO keeps the highest
+completion rate (paper: 98%, ≥11.3% above baselines; MADDPG-NoModel ~88%).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+MS = (5, 10, 15, 20)
+
+
+def run(k: int = 3, seed: int = 0):
+    table = {}
+    for m in MS:
+        for algo in common.ALL_ALGOS:
+            table[(algo, m)] = common.run_cell(algo, k, m, seed)["eval"]
+    return table
+
+
+def main():
+    table = run()
+    print("# Fig.4 ED sweep")
+    print("algo,num_eds,latency_s,energy_j,completion")
+    for m in MS:
+        for algo in common.ALL_ALGOS:
+            ev = table[(algo, m)]
+            print(
+                f"{algo},{m},{ev['latency']:.3f},{ev['energy']:.3f},"
+                f"{ev['completion']:.3f}"
+            )
+    mato20 = table[("maddpg-mato", 20)]["completion"]
+    others = [table[(a, 20)]["completion"] for a in common.ALL_ALGOS if a != "maddpg-mato"]
+    print("\n# 20-ED completion (paper: MATO 98%, >= +11.3% vs others)")
+    print(f"mato_completion,{mato20:.3f}")
+    print(f"best_other_completion,{max(others):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Populate the full paper-benchmark cache (run once, in the background).
+
+Covers every (algorithm × K × M) cell needed by convergence.py,
+model_sweep.py and ed_sweep.py. Cells already cached are skipped, so this
+is restartable/resumable after interruption (fault tolerance for the
+benchmark suite itself).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import common
+
+
+def main(seed: int = 0):
+    t0 = time.time()
+    cells = []
+    for k in (3, 4, 5, 6):  # model sweep at M=10
+        for algo in common.ALL_ALGOS:
+            cells.append((algo, k, 10))
+    for m in (5, 15, 20):  # ED sweep at K=3 (M=10 shared with model sweep)
+        for algo in common.ALL_ALGOS:
+            cells.append((algo, 3, m))
+    print(f"populating {len(cells)} cells", flush=True)
+    for i, (algo, k, m) in enumerate(cells):
+        common.run_cell(algo, k, m, seed)
+        print(f"  [{i + 1}/{len(cells)}] done ({time.time() - t0:.0f}s elapsed)", flush=True)
+    print(f"all cells populated in {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 0)

@@ -1,0 +1,181 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline) from the dry-run artifacts.
+
+Per (arch x shape) cell on the single-pod 16x16 mesh, derive the three
+roofline terms from the per-device compiled module (HLO-parsed with
+while-trip multipliers — XLA's cost_analysis counts scan bodies once):
+
+    compute    = device_FLOPs / peak_FLOP/s          (197e12 bf16, v5e)
+    memory     = device_HBM_bytes / HBM_bw           (819e9 B/s)
+    collective = device_link_bytes / ICI_bw          (50e9 B/s usable)
+
+plus: dominant term, MODEL_FLOPS = 6ND (train) / 2ND (single forward)
+with N = active params, the useful-compute ratio, and a one-line lever.
+
+Caveats recorded per cell:
+  * HBM bytes from the CPU-backend module OVERCOUNT — XLA CPU upcasts
+    bf16 dot operands to f32 mirrors that do not exist on TPU; memory
+    terms are therefore upper bounds.
+  * collective bytes use ring formulas (all-reduce 2(g-1)/g etc.).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_arch, list_archs
+
+PEAK_FLOPS = 197e12     # bf16 per v5e chip
+HBM_BW = 819e9          # B/s
+ICI_BW = 50e9           # B/s per link
+CHIPS = 256
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_arch(arch)
+    sh = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if sh["kind"] == "train":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 6.0 * n * tokens          # fwd+bwd
+    if sh["kind"] == "prefill":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 2.0 * n * tokens
+    return 2.0 * n * sh["global_batch"]  # decode: one token per sequence
+
+
+def ideal_bytes(arch: str, shape_name: str) -> float:
+    """Minimal HBM traffic per step (global, bytes) — the memory floor.
+
+    train:   params read (fwd+bwd) + grad write + Adam moments r/w
+             + activation stack write+read (remat keeps one (B,S,d)/layer)
+    prefill: params read + KV/state cache write + activations
+    decode:  params read once + full cache read + slice write
+    """
+    cfg = get_arch(arch)
+    sh = SHAPES[shape_name]
+    n, na = cfg.param_count(), cfg.active_param_count()
+    pb = 2.0  # bf16 param bytes
+    mb = 2.0 if cfg.moment_dtype == "bfloat16" else 4.0
+    tokens = sh["global_batch"] * sh["seq_len"]
+    act = tokens * cfg.d_model * cfg.num_layers * 2.0
+    if sh["kind"] == "train":
+        return n * (3 * pb + 4 * mb) + 2 * act
+    if sh["kind"] == "prefill":
+        cache = _cache_bytes(cfg, sh)
+        return na * pb * max(1, tokens // 8192) + cache + 2 * act
+    cache = _cache_bytes(cfg, sh)
+    return n * pb + cache  # decode: weights + cache stream
+
+
+def _cache_bytes(cfg, sh) -> float:
+    b = sh["global_batch"]
+    s = min(sh["seq_len"], cfg.window) if cfg.window else sh["seq_len"]
+    if cfg.family == "ssm":
+        return b * cfg.num_layers * (
+            cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4.0
+            + (cfg.d_inner + 2 * cfg.ssm_state) * (cfg.ssm_conv - 1) * 2.0
+        )
+    if cfg.family == "hybrid":
+        groups = cfg.num_layers // cfg.hybrid_period
+        ssm = b * cfg.num_layers * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4.0
+        attn = 2.0 * b * groups * s * cfg.num_kv_heads * cfg.head_dim * 2.0
+        return ssm + attn
+    return 2.0 * b * cfg.num_layers * s * cfg.num_kv_heads * cfg.head_dim * 2.0
+
+
+def cell_terms(rec: dict) -> dict:
+    hlo = rec["hlo"]
+    t_compute = hlo["flops"] / PEAK_FLOPS
+    t_memory = hlo["hbm_bytes"] / HBM_BW
+    t_coll = hlo["collective_bytes"] / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / CHIPS / max(hlo["flops"], 1.0)
+    bound = max(t_compute, t_memory, t_coll)
+    # the floor is whichever wall the WORKLOAD inherently hits first:
+    # compute (6ND/2ND) or minimal HBM traffic (weights+cache+activations)
+    ideal_c = mf / CHIPS / PEAK_FLOPS
+    ideal_m = ideal_bytes(rec["arch"], rec["shape"]) / CHIPS / HBM_BW
+    ideal = max(ideal_c, ideal_m)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "ideal_s": ideal,
+        "roofline_fraction": min(1.0, ideal / max(bound, 1e-30)),
+        "peak_gib": rec["memory"]["peak_device_bytes"] / 2**30,
+    }
+
+
+def load_cells(mesh="pod16x16", tag="baseline"):
+    out = {}
+    for arch in list_archs():
+        for shape in SHAPES:
+            p = RESULTS / f"{arch}_{shape}_{mesh}_{tag}.json"
+            if not p.exists():
+                continue
+            rec = json.loads(p.read_text())
+            if rec["status"] != "ok":
+                out[(arch, shape)] = {"status": rec["status"],
+                                      "reason": rec.get("reason", "")}
+                continue
+            terms = cell_terms(rec)
+            terms["status"] = "ok"
+            out[(arch, shape)] = terms
+    return out
+
+
+LEVERS = {
+    "compute": "cut redundant FLOPs (remat policy, drop capacity overprovision)",
+    "memory": "fuse / widen arithmetic intensity (kernel fusion, bf16 paths)",
+    "collective": "reshard to cut gathers (activation layout, FSDP prefetch)",
+}
+
+
+def main(mesh="pod16x16"):
+    cells = load_cells(mesh=mesh)
+    print(f"# §Roofline — {mesh}, per-device terms (seconds)")
+    print("arch,shape,t_compute,t_memory,t_collective,dominant,"
+          "model_flops,useful_ratio,roofline_fraction,peak_GiB,lever")
+    for (arch, shape), t in sorted(cells.items()):
+        if t["status"] != "ok":
+            print(f"{arch},{shape},skipped:{t['reason'][:40]},,,,,,,,")
+            continue
+        print(
+            f"{arch},{shape},{t['t_compute_s']:.4g},{t['t_memory_s']:.4g},"
+            f"{t['t_collective_s']:.4g},{t['dominant']},{t['model_flops']:.3g},"
+            f"{t['useful_ratio']:.3f},{t['roofline_fraction']:.3f},"
+            f"{t['peak_gib']:.1f},{LEVERS[t['dominant']]}"
+        )
+
+
+def main_multipod():
+    """Multi-pod sanity: the pod axis must only add gradient traffic."""
+    single = load_cells("pod16x16")
+    multi = load_cells("pod2x16x16")
+    print("# multi-pod delta (collective seconds, 512 vs 256 chips)")
+    print("arch,shape,t_coll_single,t_coll_multi,flops_ratio")
+    for key in sorted(single):
+        s, m = single[key], multi.get(key)
+        if not m or s["status"] != "ok" or m["status"] != "ok":
+            continue
+        fr = m["t_compute_s"] / max(s["t_compute_s"], 1e-12)
+        print(f"{key[0]},{key[1]},{s['t_collective_s']:.4g},"
+              f"{m['t_collective_s']:.4g},{fr:.3f}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if len(sys.argv) > 1 and sys.argv[1] == "--multi":
+        main_multipod()
+    else:
+        main()

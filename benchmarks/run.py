@@ -1,0 +1,163 @@
+"""Benchmark entry point: one section per paper table/figure + the
+framework's own microbenchmarks + the roofline summary.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+CSV convention per scaffold: ``name,us_per_call,derived``.
+Paper-figure sections read the cached training results in
+``benchmarks/results/`` (populate with ``python -m benchmarks.populate``).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, *args, n=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def bench_env_step():
+    """IIoT environment throughput (vectorised, jitted)."""
+    from repro.core import baselines, env as env_lib
+
+    p = env_lib.default_params(num_eds=10, num_models=3)
+    state = env_lib.reset(jax.random.key(0), p)
+    obs = env_lib.observe(state, p)
+
+    @jax.jit
+    def step(state, key):
+        act = baselines.random_policy(key, env_lib.observe(state, p), p)
+        nxt, _, out, _ = env_lib.step(state, act, p)
+        return nxt, out.reward.sum()
+
+    us = _timeit(lambda: step(state, jax.random.key(1))[1])
+    print(f"env_step_10ed,{us:.1f},agent_steps_per_s={10e6 / us:.0f}")
+
+
+def bench_maddpg_update():
+    from repro.core import env as env_lib, maddpg, replay
+
+    p = env_lib.default_params(num_eds=10, num_models=3)
+    cfg = maddpg.AlgoConfig(batch_size=512)
+    ts = maddpg.init_state(jax.random.key(0), p, cfg)
+    ex = maddpg.make_transition_example(p, cfg)
+    buf = replay.init(2048, ex)
+    buf = replay.add_batch(
+        buf, jax.tree.map(lambda x: jnp.ones((2048,) + x.shape, x.dtype), ex), 2048
+    )
+    batch = replay.sample(buf, jax.random.key(1), cfg.batch_size)
+    upd = jax.jit(lambda t: maddpg.update(t, batch, jax.random.key(2), p, cfg))
+    us = _timeit(upd, ts)
+    print(f"maddpg_update_b512,{us:.1f},updates_per_s={1e6 / us:.2f}")
+
+
+def bench_kernels():
+    from repro.kernels import ref
+
+    q = jax.random.normal(jax.random.key(0), (4, 1024, 8, 64), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (4, 1024, 2, 64), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (4, 1024, 2, 64), jnp.float32)
+    att = jax.jit(lambda a, b, c: ref.attention_xla(a, b, c, causal=True))
+    us = _timeit(att, q, k, v)
+    flops = 4 * 4 * 8 * 1024 * 1024 * 64 / 2  # causal
+    print(f"attention_xla_4x1024x8x64,{us:.1f},gflops_per_s={flops / us / 1e3:.1f}")
+
+    x = jax.random.normal(jax.random.key(3), (2, 2048, 8, 64))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(4), (2, 2048, 8)))
+    a_log = jax.random.normal(jax.random.key(5), (8,)) * 0.5
+    b = jax.random.normal(jax.random.key(6), (2, 2048, 64))
+    c = jax.random.normal(jax.random.key(7), (2, 2048, 64))
+    d = jnp.ones((8,))
+    ssd = jax.jit(lambda *a: ref.ssd_chunked_xla(*a, chunk=256)[0])
+    us = _timeit(ssd, x, dt, a_log, b, c, d)
+    print(f"ssd_xla_2x2048x8x64,{us:.1f},tokens_per_s={2 * 2048 * 1e6 / us:.0f}")
+
+    xr = jax.random.normal(jax.random.key(8), (4096, 2048), jnp.bfloat16)
+    sc = jnp.ones((2048,), jnp.bfloat16)
+    rms = jax.jit(lambda a, s: ref.rmsnorm_naive(a, s))
+    us = _timeit(rms, xr, sc)
+    gb = 2 * xr.size * 2 / 1e9
+    print(f"rmsnorm_4096x2048,{us:.1f},gb_per_s={gb * 1e6 / us:.1f}")
+
+
+def bench_train_step():
+    from repro.configs import get_arch, reduced
+    from repro.data import pipeline
+    from repro.models import lm
+    from repro.models.train import make_train_step
+
+    cfg = reduced(get_arch("smollm_135m"))
+    params = lm.init_params(jax.random.key(0), cfg)
+    dc = pipeline.DataConfig(seq_len=128, global_batch=4, vocab=cfg.vocab)
+    batch = pipeline.synthetic_batch(cfg, dc, 0)
+    opt_init, step = make_train_step(cfg)
+    opt = opt_init(params)
+    jit_step = jax.jit(step)
+    us = _timeit(lambda: jit_step(params, opt, batch)[2]["loss"], n=3, warmup=1)
+    print(f"lm_train_step_reduced,{us:.1f},tokens_per_s={4 * 128 * 1e6 / us:.0f}")
+
+
+def paper_tables():
+    from benchmarks import convergence, ed_sweep, model_sweep
+
+    print("\n=== paper Fig.2 (convergence) ===")
+    try:
+        convergence.main()
+    except Exception as e:  # cache missing
+        print(f"(skipped: {e})")
+    print("\n=== paper Fig.3 (model sweep) ===")
+    try:
+        model_sweep.main()
+    except Exception as e:
+        print(f"(skipped: {e})")
+    print("\n=== paper Fig.4 (ED sweep) ===")
+    try:
+        ed_sweep.main()
+    except Exception as e:
+        print(f"(skipped: {e})")
+
+
+def roofline_table():
+    from benchmarks import roofline
+
+    print("\n=== roofline (from dry-run artifacts) ===")
+    try:
+        roofline.main()
+        print()
+        roofline.main_multipod()
+    except Exception as e:
+        print(f"(skipped: {e})")
+
+
+def faithful_table():
+    from benchmarks import faithful_ablation
+
+    print("\n=== faithful-vs-corrected cost model (DESIGN.md §3) ===")
+    try:
+        faithful_ablation.main()
+    except Exception as e:
+        print(f"(skipped: {e})")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_env_step()
+    bench_maddpg_update()
+    bench_kernels()
+    bench_train_step()
+    paper_tables()
+    faithful_table()
+    roofline_table()
+
+
+if __name__ == "__main__":
+    main()

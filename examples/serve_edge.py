@@ -1,0 +1,27 @@
+"""Model-aware edge serving demo: the paper's offloading policy routes
+batched generation requests across a 3-server edge fleet caching real
+architectures from the assigned pool, then each routed request actually
+prefimms+decodes through the model zoo on the local device.
+
+    PYTHONPATH=src python examples/serve_edge.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import serve  # noqa: E402
+
+
+def main():
+    print("routing 24 requests over 3 edge servers (model-aware greedy)...")
+    stats = serve(num_requests=24, n_servers=3, execute=True)
+    for k, v in stats.items():
+        print(f"  {k}: {v}")
+    # model-aware routing should keep most requests on resident models
+    assert stats["residency_hit_rate"] > 0.5
+    print("OK: model-aware router keeps requests on cached models")
+
+
+if __name__ == "__main__":
+    main()

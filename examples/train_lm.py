@@ -1,0 +1,42 @@
+"""End-to-end LM training driver example: trains a ~100M-class model for a
+few hundred steps through the full production path (sharded params,
+deterministic pipeline, atomic checkpoints + auto-resume, straggler
+monitor). The loss must visibly fall.
+
+    PYTHONPATH=src python examples/train_lm.py            # reduced, CPU-sized
+    PYTHONPATH=src python examples/train_lm.py --full     # real smollm-135m
+
+The same driver trains any of the 10 assigned archs: --arch mixtral_8x7b etc.
+"""
+import argparse
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.train import train  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        _, losses = train(
+            args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+            use_reduced=not args.full, ckpt_dir=ckpt, ckpt_every=100,
+        )
+    drop = losses[0] - losses[-1]
+    print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} (drop {drop:.3f})")
+    assert drop > 0.3, "training failed to reduce loss"
+    print("OK: end-to-end training path works")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Atomic, resumable checkpointing (no orbax in this environment).
+
+Design for the 1000+-node case:
+  * **atomicity** — write to ``step_N.tmp/`` then ``rename`` (POSIX-atomic),
+    so a node failure mid-write never corrupts the restore point;
+  * **auto-resume** — ``latest_step`` scans committed checkpoints only;
+    ``restore`` never sees a partial write;
+  * **sharded-friendly layout** — one ``.npy`` per pytree leaf keyed by
+    tree path. On a multi-host cluster each host dumps only the
+    addressable shards of its leaves into ``<leafkey>.shard<i>.npy``;
+    here (single process) every leaf is fully addressable;
+  * **retention** — keep the last ``keep`` checkpoints, GC the rest.
+
+The trainer (`launch/train.py`) checkpoints on a cadence and restores on
+startup, which together with the deterministic data pipeline gives full
+fault-tolerant restart semantics.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(ckpt_dir, step: int, tree, *, keep: int = 3, extra: dict | None = None):
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f"step_{step}.tmp"
+    final = ckpt_dir / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    flat, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": sorted(flat), "extra": extra or {}}
+    for key, leaf in flat.items():
+        np.save(tmp / (key.replace("/", "__") + ".npy"), np.asarray(leaf))
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic commit
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def latest_step(ckpt_dir) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in ckpt_dir.iterdir()
+        if p.name.startswith("step_") and not p.name.endswith(".tmp")
+        and (p / "manifest.json").exists()
+    ]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir, step: int, like):
+    """Restore into the structure (and dtypes) of ``like``."""
+    path = Path(ckpt_dir) / f"step_{step}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    flat, treedef = _flatten(like)
+    assert sorted(flat) == manifest["leaves"], "checkpoint/model structure mismatch"
+    restored = []
+    for key in flat:  # insertion order == tree_flatten order
+        arr = np.load(path / (key.replace("/", "__") + ".npy"))
+        restored.append(jax.numpy.asarray(arr, dtype=flat[key].dtype))
+    return jax.tree_util.tree_unflatten(treedef, restored), manifest["extra"]
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(
+        (int(p.name.split("_")[1]), p)
+        for p in ckpt_dir.iterdir()
+        if p.name.startswith("step_") and not p.name.endswith(".tmp")
+    )
+    for _, p in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(p)

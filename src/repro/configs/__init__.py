@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    SHAPES,
+    get_arch,
+    input_specs,
+    list_archs,
+    reduced,
+    shape_applicable,
+)

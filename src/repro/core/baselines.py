@@ -1,0 +1,58 @@
+"""Non-learned baseline policies from paper §IV.A: Random and Greedy.
+
+Both are pure functions ``(key, obs, p) -> Action`` so they plug into the
+same jitted evaluation harness as the trained actors (``core.evaluate``).
+They read only the per-agent observation (eq. 16) — compatibility bits,
+ES positions and own position are all in there.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import env as env_lib
+from repro.core.types import Action, EnvParams
+
+
+def _obs_slices(p: EnvParams):
+    k, n = p.num_models, p.num_ess
+    i = 0
+    sl = {}
+    sl["type"] = (i, i + k); i += k
+    sl["x"] = (i, i + 1); i += 1
+    sl["rho"] = (i, i + 1); i += 1
+    sl["f_es"] = (i, i + n); i += n
+    sl["compat"] = (i, i + n); i += n
+    sl["own_pos"] = (i, i + 2); i += 2
+    sl["es_pos"] = (i, i + 2 * n); i += 2 * n
+    sl["cc_pos"] = (i, i + 2); i += 2
+    sl["f_ed"] = (i, i + 1); i += 1
+    assert i == env_lib.obs_dim(p)
+    return sl
+
+
+def random_policy(key, obs, p: EnvParams) -> Action:
+    """Uniform target/ratio/download — no model awareness (paper §IV.A)."""
+    m = obs.shape[0]
+    k1, k2, k3 = jax.random.split(key, 3)
+    return Action(
+        target=jax.random.randint(k1, (m,), 0, p.num_ess + 1),
+        eta=jax.random.uniform(k2, (m,)),
+        beta=(jax.random.uniform(k3, (m,)) > 0.5).astype(jnp.float32),
+    )
+
+
+def greedy_policy(key, obs, p: EnvParams) -> Action:
+    """Nearest *compatible* ES with eta=1.0; local if none compatible."""
+    del key
+    sl = _obs_slices(p)
+    compat = obs[:, sl["compat"][0] : sl["compat"][1]]  # (M, N)
+    own = obs[:, sl["own_pos"][0] : sl["own_pos"][1]]  # (M, 2)
+    es = obs[:, sl["es_pos"][0] : sl["es_pos"][1]].reshape(-1, p.num_ess, 2)
+    dist = jnp.linalg.norm(es - own[:, None, :], axis=-1)  # (M, N)
+    dist = jnp.where(compat > 0.5, dist, jnp.inf)
+    best = jnp.argmin(dist, axis=-1)
+    any_compat = compat.max(axis=-1) > 0.5
+    target = jnp.where(any_compat, best + 1, 0).astype(jnp.int32)
+    eta = jnp.where(any_compat, 1.0, 0.0)
+    return Action(target=target, eta=eta, beta=jnp.zeros_like(eta))

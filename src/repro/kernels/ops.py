@@ -1,0 +1,54 @@
+"""Jit'd dispatch layer: every hot-spot op routes to either the Pallas TPU
+kernel (``backend="pallas"``, validated in interpret mode on CPU) or the
+memory-sane XLA implementation (``backend="xla"``, used by the CPU
+dry-run — Pallas TPU kernels cannot lower on the host platform).
+
+Both backends share the oracles in ``ref.py``; tests assert allclose.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_INTERPRET = True  # this container is CPU-only; on TPU set False
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, backend: str = "xla"):
+    if backend == "pallas":
+        from repro.kernels import rmsnorm as _k
+
+        return _k.rmsnorm(x, scale, eps=eps, interpret=_INTERPRET)
+    return ref.rmsnorm_naive(x, scale, eps)
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0, backend: str = "xla"):
+    if backend == "pallas":
+        from repro.kernels import flash_attention as _k
+
+        return _k.flash_attention(
+            q, k, v, causal, window, q_offset, 128, 128, _INTERPRET
+        )
+    return ref.attention_xla(q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+def decode_attention(q, k, v, pos, *, window=0, backend: str = "xla"):
+    if backend == "pallas":
+        from repro.kernels import flash_decode as _k
+
+        return _k.flash_decode(q, k, v, pos, window=window, interpret=_INTERPRET)
+    return ref.decode_attention_naive(q, k, v, pos, window=window)
+
+
+def ssd(x, dt, a_log, b, c, d_skip, *, chunk: int = 256, backend: str = "xla"):
+    if backend == "pallas":
+        from repro.kernels import ssd_scan as _k
+
+        return _k.ssd(x, dt, a_log, b, c, d_skip, chunk, _INTERPRET)
+    return ref.ssd_chunked_xla(x, dt, a_log, b, c, d_skip, chunk=chunk)
+
+
+def ssd_decode(state, xt, dtt, a_log, bt, ct, d_skip, *, backend: str = "xla"):
+    # single recurrent step is bandwidth-trivial; always the jnp path
+    del backend
+    return ref.ssd_decode_naive(state, xt, dtt, a_log, bt, ct, d_skip)

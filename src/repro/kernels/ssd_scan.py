@@ -1,0 +1,147 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+TPU adaptation of the CUDA SSD kernel (arXiv:2405.21060 §8): the GPU
+version leans on warp-level scans; here the inter-chunk recurrence is
+carried in VMEM scratch across the sequential chunk grid dimension, and
+the intra-chunk quadratic part is MXU panels ((Q x Q) score matmuls).
+fp32 state and accumulation throughout; inputs may be bf16.
+
+Grid: (B * H, num_chunks) — chunks innermost (sequential recurrence).
+Backward: custom_vjp via the XLA chunked reference (same numerics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+
+
+def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, dskip_ref, y_ref, state_ref,
+            state_scr, *, chunk, num_chunks):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)      # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)    # (Q,)
+    bm = b_ref[0].astype(jnp.float32)           # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)           # (Q, N)
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))  # scalar decay rate
+    d_skip = dskip_ref[0].astype(jnp.float32)
+
+    adt = a * dt                                # (Q,)
+    cum = jnp.cumsum(adt)                       # (Q,)
+    total = cum[-1]
+
+    # intra-chunk: gate[i,j] = (C_i . B_j) * exp(cum_i - cum_j), j <= i
+    li = cum[:, None] - cum[None, :]
+    causal = jax.lax.broadcasted_iota(jnp.int32, li.shape, 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, li.shape, 1)
+    decay = jnp.where(causal, jnp.exp(li), 0.0)
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q)
+    xdt = x * dt[:, None]                       # (Q, P)
+    y = jax.lax.dot_general(
+        scores * decay, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # inter-chunk: y += exp(cum_i) * C_i . state
+    state = state_scr[...]                      # (N, P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # state update: state' = exp(total) * state + sum_j exp(total - cum_j) B_j xdt_j
+    rem = jnp.exp(total - cum)                  # (Q,)
+    state_scr[...] = state * jnp.exp(total) + jax.lax.dot_general(
+        bm * rem[:, None], xdt, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    y_ref[0, :, 0] = (y + x * d_skip).astype(y_ref.dtype)
+
+    @pl.when(cb == num_chunks - 1)
+    def _finalize():
+        state_ref[0, 0] = state_scr[...].transpose(1, 0).astype(state_ref.dtype)
+
+
+def _ssd_fwd_impl(x, dt, a_log, b, c, d_skip, *, chunk, interpret):
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    s_orig = s
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        s += pad
+    nc = s // chunk
+
+    # flatten (B, H) into the leading grid dim; B/C shared across heads
+    xt = x.transpose(0, 2, 1, 3).reshape(bsz * h, s, 1, p)
+    dtt = dt.transpose(0, 2, 1).reshape(bsz * h, s, 1)
+    a_rep = jnp.broadcast_to(a_log[None], (bsz, h)).reshape(bsz * h)
+    d_rep = jnp.broadcast_to(d_skip[None], (bsz, h)).reshape(bsz * h)
+    b_rep = jnp.broadcast_to(b[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+    c_rep = jnp.broadcast_to(c[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+
+    kernel = functools.partial(_kernel, chunk=chunk, num_chunks=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(bsz * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda g, cb: (g, cb, 0, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda g, cb: (g, cb, 0)),
+            pl.BlockSpec((1,), lambda g, cb: (g,)),
+            pl.BlockSpec((1, chunk, n), lambda g, cb: (g, cb, 0)),
+            pl.BlockSpec((1, chunk, n), lambda g, cb: (g, cb, 0)),
+            pl.BlockSpec((1,), lambda g, cb: (g,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda g, cb: (g, cb, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda g, cb: (g, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz * h, s, 1, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz * h, 1, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, a_rep, b_rep, c_rep, d_rep)
+    y = y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3)[:, :s_orig]
+    state = state.reshape(bsz, h, p, n)
+    return y, state
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def ssd(x, dt, a_log, b, c, d_skip, chunk=256, interpret=False):
+    return _ssd_fwd_impl(x, dt, a_log, b, c, d_skip, chunk=chunk,
+                         interpret=interpret)
+
+
+def _fwd(x, dt, a_log, b, c, d_skip, chunk, interpret):
+    out = _ssd_fwd_impl(x, dt, a_log, b, c, d_skip, chunk=chunk,
+                        interpret=interpret)
+    return out, (x, dt, a_log, b, c, d_skip)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, dt, a_log, b, c, d_skip = res
+    _, vjp = jax.vjp(
+        lambda *args: ref.ssd_chunked_xla(*args, chunk=chunk),
+        x, dt, a_log, b, c, d_skip,
+    )
+    return vjp(g)
+
+
+ssd.defvjp(_fwd, _bwd)

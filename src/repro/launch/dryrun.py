@@ -1,0 +1,208 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the very first two lines — jax locks the device count on first
+init, and only this entry point may see 512 placeholder devices:
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_arch, input_specs, list_archs, shape_applicable  # noqa: E402
+from repro.distributed import sharding  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.models.train import make_train_step  # noqa: E402
+from repro.optim.adamw import OptState  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def _eval_shape_tree(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def build_cell(arch: str, shape_name: str, mesh, overrides=None):
+    """Returns (jitted fn, example args as ShapeDtypeStructs)."""
+    cfg = get_arch(arch, **(overrides or {}))
+    sh = SHAPES[shape_name]
+    gb = sh["global_batch"]
+
+    params_shape = jax.eval_shape(lambda: lm.init_params(jax.random.key(0), cfg))
+    pspecs = sharding.param_specs(params_shape, cfg, mesh)
+    pshard = sharding.to_named(pspecs, mesh)
+
+    if sh["kind"] == "train":
+        opt_init, train_step = make_train_step(cfg, mesh=mesh)
+        opt_shape = jax.eval_shape(opt_init, params_shape)
+        oshard = OptState(
+            step=sharding.to_named(P(), mesh),
+            mu=sharding.to_named(pspecs, mesh),
+            nu=sharding.to_named(pspecs, mesh),
+        )
+        batch = input_specs(cfg, shape_name)
+        bs = sharding.batch_spec(cfg, mesh, gb)
+        bshard = {k: sharding.to_named(bs(v.ndim), mesh) for k, v in batch.items()}
+        fn = jax.jit(
+            train_step,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, sharding.to_named(P(), mesh)),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params_shape, opt_shape, batch), cfg
+
+    if sh["kind"] == "prefill":
+        batch = input_specs(cfg, shape_name)
+        bs = sharding.batch_spec(cfg, mesh, gb)
+        bshard = {k: sharding.to_named(bs(v.ndim), mesh) for k, v in batch.items()}
+
+        def prefill_fn(params, tokens, patch_embeds=None):
+            return lm.prefill(params, tokens, cfg, patch_embeds=patch_embeds,
+                              mesh=mesh)
+
+        cache_shape = jax.eval_shape(
+            lambda: lm.init_cache(cfg, gb, sh["seq_len"])
+        )
+        cshard = sharding.to_named(
+            sharding.cache_specs(cache_shape, cfg, mesh, gb), mesh
+        )
+        out_shard = (
+            sharding.to_named(P(), mesh),
+            sharding.to_named(P(), mesh),
+            cshard,
+        )
+        args = [params_shape, batch["tokens"]]
+        in_sh = [pshard, bshard["tokens"]]
+        if "patch_embeds" in batch:
+            args.append(batch["patch_embeds"])
+            in_sh.append(bshard["patch_embeds"])
+        fn = jax.jit(prefill_fn, in_shardings=tuple(in_sh), out_shardings=out_shard)
+        return fn, tuple(args), cfg
+
+    # decode
+    batch = input_specs(cfg, shape_name)
+    cache_shape = jax.eval_shape(lambda: lm.init_cache(cfg, gb, sh["seq_len"]))
+    cshard = sharding.to_named(
+        sharding.cache_specs(cache_shape, cfg, mesh, gb), mesh
+    )
+    bs = sharding.batch_spec(cfg, mesh, gb)
+    tshard = sharding.to_named(bs(batch["tokens"].ndim), mesh)
+
+    def decode_fn(params, cache, tokens, pos):
+        return lm.decode_step(params, cache, tokens, pos, cfg, mesh=mesh)
+
+    fn = jax.jit(
+        decode_fn,
+        in_shardings=(pshard, cshard, tshard, sharding.to_named(P(), mesh)),
+        out_shardings=(
+            sharding.to_named(P(), mesh),
+            sharding.to_named(P(), mesh),
+            cshard,
+        ),
+        donate_argnums=(1,),
+    )
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return fn, (params_shape, cache_shape, batch["tokens"], pos), cfg
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, overrides=None,
+             tag: str = "baseline", verbose=True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out_path = RESULTS_DIR / f"{arch}_{shape_name}_{mesh_name}_{tag}.json"
+    if out_path.exists():
+        return json.loads(out_path.read_text())
+
+    cfg = get_arch(arch, **(overrides or {}))
+    ok, why = shape_applicable(cfg, shape_name)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "overrides": overrides or {},
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+    else:
+        t0 = time.time()
+        try:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+            fn, args, cfg = build_cell(arch, shape_name, mesh, overrides)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = hlo_analysis.analyze(compiled.as_text())
+            rec.update(
+                status="ok",
+                lower_s=round(t_lower, 1),
+                compile_s=round(t_compile, 1),
+                memory={
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes,
+                    "temp_bytes": mem.temp_size_in_bytes,
+                    "alias_bytes": mem.alias_size_in_bytes,
+                    "peak_device_bytes": mem.argument_size_in_bytes
+                    + mem.temp_size_in_bytes
+                    + mem.output_size_in_bytes
+                    - mem.alias_size_in_bytes,
+                },
+                xla_cost={
+                    "flops_per_device_unscaled": cost.get("flops", 0.0),
+                    "bytes_unscaled": cost.get("bytes accessed", 0.0),
+                },
+                hlo=hlo,
+                params=cfg.param_count(),
+                active_params=cfg.active_param_count(),
+            )
+        except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       trace=traceback.format_exc()[-2000:])
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    if verbose:
+        msg = rec["status"]
+        if rec["status"] == "ok":
+            gb = rec["memory"]["peak_device_bytes"] / 2**30
+            msg += (f" peak={gb:.1f}GiB/dev flops={rec['hlo']['flops']:.2e} "
+                    f"coll={rec['hlo']['collective_bytes']:.2e}B "
+                    f"compile={rec['compile_s']}s")
+        elif rec["status"] == "error":
+            msg += " " + rec["error"][:160]
+        else:
+            msg += " " + rec["reason"][:80]
+        print(f"[{arch} x {shape_name} x {mesh_name}] {msg}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    args = ap.parse_args()
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    t0 = time.time()
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                run_cell(arch, shape, multi_pod=mp)
+    print(f"dry-run sweep done in {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (qk-norm,
+sliding window, KV cache), SwiGLU/GELU MLP.
+
+Functional convention: ``<thing>_init(key, cfg) -> params`` and
+``<thing>_apply(params, x, ...)``. Parameters are plain dicts; compute
+dtype comes from the ArchConfig, with fp32 for norms/softmax.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# =============================== RMSNorm ======================================
+def rmsnorm_init(cfg: ArchConfig, dim=None):
+    return {"scale": jnp.ones((dim or cfg.d_model,), _dtype(cfg))}
+
+
+def rmsnorm_apply(params, x, cfg: ArchConfig):
+    return ops.rmsnorm(x, params["scale"], backend=cfg.kernel_backend)
+
+
+# =============================== RoPE =========================================
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (S,) or (B, S) absolute positions."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    if positions.ndim == 1:
+        angles = positions[:, None].astype(jnp.float32) * freqs[None]  # (S, D/2)
+        angles = angles[None, :, None, :]  # (1, S, 1, D/2)
+    else:
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+        angles = angles[:, :, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# =============================== Attention ====================================
+def attention_init(key, cfg: ArchConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": _normal(ks[0], (d, h, hd), dt, scale),
+        "wk": _normal(ks[1], (d, kv, hd), dt, scale),
+        "wv": _normal(ks[2], (d, kv, hd), dt, scale),
+        "wo": _normal(ks[3], (h, hd, d), dt, (h * hd) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def attention_apply(params, x, positions, cfg: ArchConfig, *, cache=None, pos=None,
+                    collect_kv=False, mesh=None):
+    """x: (B, S, d). Returns (out, new_cache).
+
+    Prefill/train: cache=None, positions (S,); ``collect_kv`` additionally
+    returns the K/V cache (prefill serving path — the write-out bytes are
+    part of the prefill roofline).
+    Decode: S==1; cache={"k","v"}: (B, S_max, KV, hd); pos scalar write index.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(cd)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cd))
+    if cfg.cp_attention:
+        # context parallelism: queries sharded along S, K/V gathered once —
+        # avoids the S->head all-to-all reshard inside the q-chunk scan
+        q = constrain(q, mesh, "batch", "model", None, None)
+    else:
+        q = constrain(q, mesh, "batch", None, "model!", None)
+    k = constrain(k, mesh, "batch", None, None, None)
+    v = constrain(v, mesh, "batch", None, None, None)
+
+    if cfg.qk_norm:
+        q = ops.rmsnorm(q, params["q_norm"], backend=cfg.kernel_backend)
+        k = ops.rmsnorm(k, params["k_norm"], backend=cfg.kernel_backend)
+
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = ops.attention(
+            q, k, v, causal=True, window=cfg.window, backend=cfg.kernel_backend
+        )
+        new_cache = None
+        if collect_kv:
+            keep = min(k.shape[1], cfg.window) if cfg.window > 0 else k.shape[1]
+            new_cache = {
+                "k": constrain(k[:, -keep:], mesh, "batch", "model", None, None),
+                "v": constrain(v[:, -keep:], mesh, "batch", "model", None, None),
+            }
+    else:
+        # write the new K/V at slot `pos` (ring-buffer slot for SWA).
+        # Keep everything in the cache's layout (batch, S->model) — decode
+        # attention is sequence-parallel (partial softmax + tiny all-reduce);
+        # without these constraints GSPMD reshards the cache to kv-head
+        # sharding every layer (full rematerialisation, see EXPERIMENTS).
+        slot = pos % cache["k"].shape[1] if cfg.window > 0 else pos
+        int8_kv = cfg.kv_cache_dtype == "int8"
+        if int8_kv:
+            # §Perf: per-(token, head) absmax int8 — halves the KV stream,
+            # the decode-cell HBM floor
+            kq, ks_ = _quant_kv(k)
+            vq, vs_ = _quant_kv(v)
+            new_cache = {
+                "k": _dus(cache["k"], kq, slot),
+                "v": _dus(cache["v"], vq, slot),
+                "k_scale": _dus(cache["k_scale"], ks_, slot),
+                "v_scale": _dus(cache["v_scale"], vs_, slot),
+            }
+            new_cache = {
+                kk: constrain(vv, mesh, "batch", "model", None, None)
+                for kk, vv in new_cache.items()
+            }
+            ck = new_cache["k"].astype(cd) * new_cache["k_scale"].astype(cd)
+            cv = new_cache["v"].astype(cd) * new_cache["v_scale"].astype(cd)
+        else:
+            ck = _dus(cache["k"], k.astype(cache["k"].dtype), slot)
+            cv = _dus(cache["v"], v.astype(cache["v"].dtype), slot)
+            ck = constrain(ck, mesh, "batch", "model", None, None)
+            cv = constrain(cv, mesh, "batch", "model", None, None)
+            new_cache = {"k": ck, "v": cv}
+        q = constrain(q, mesh, "batch", None, None, None)
+        if cfg.window > 0:
+            # ring cache: while cold (pos < window) only slots <= pos exist;
+            # once warm every slot is in-window by construction.
+            pos_eff = jnp.minimum(pos, cache["k"].shape[1] - 1)
+        else:
+            pos_eff = pos
+        out = ops.decode_attention(
+            q, ck.astype(cd), cv.astype(cd), pos_eff, backend=cfg.kernel_backend
+        )
+
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd))
+    if cfg.sp_block_outputs and cache is None:
+        # S-shard the partial-sum output BEFORE the residual add so the
+        # head-contraction lowers to reduce-scatter, not all-reduce+slice
+        out = constrain(out, mesh, "batch", "model", None)
+    return out, new_cache
+
+
+def _dus(buf, val, slot):
+    return jax.lax.dynamic_update_slice_in_dim(buf, val, slot, axis=1)
+
+
+def _quant_kv(x):
+    """(B, 1, KV, hd) -> int8 values + bf16 per-(token, head) scales."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def attention_cache_init(cfg: ArchConfig, batch: int, seq_len: int, dtype=None):
+    s = min(seq_len, cfg.window) if cfg.window > 0 else seq_len
+    shape = (batch, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        sshape = (batch, s, cfg.num_kv_heads, 1)
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(sshape, jnp.bfloat16),
+            "v_scale": jnp.zeros(sshape, jnp.bfloat16),
+        }
+    dt = dtype or jnp.dtype(cfg.compute_dtype)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+# =============================== MLP ==========================================
+def mlp_init(key, cfg: ArchConfig):
+    d, ff, dt = cfg.d_model, cfg.d_ff, _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wg": _normal(ks[0], (d, ff), dt, d**-0.5),
+            "wu": _normal(ks[1], (d, ff), dt, d**-0.5),
+            "wd": _normal(ks[2], (ff, d), dt, ff**-0.5),
+        }
+    return {
+        "wu": _normal(ks[0], (d, ff), dt, d**-0.5),
+        "wd": _normal(ks[1], (ff, d), dt, ff**-0.5),
+    }
+
+
+def mlp_apply(params, x, cfg: ArchConfig, mesh=None):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(cd)
+    if cfg.mlp_type == "swiglu":
+        g = x @ params["wg"].astype(cd)
+        u = x @ params["wu"].astype(cd)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(x @ params["wu"].astype(cd))
+    h = constrain(h, mesh, "batch", None, "model")
+    out = h @ params["wd"].astype(cd)
+    if cfg.sp_block_outputs:
+        out = constrain(out, mesh, "batch", "model", None)
+    return out

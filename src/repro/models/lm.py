@@ -1,0 +1,182 @@
+"""Full language model: embeddings -> stacked blocks -> norm -> head,
+with ``loss_fn`` (train), ``prefill`` and ``decode_step`` (serve).
+
+Modality frontends (assignment: stubs):
+  * text  — token embedding lookup.
+  * audio — musicgen: (B, S, n_codebooks) EnCodec token ids; embedding =
+    sum over per-codebook tables; one head per codebook; loss averaged.
+  * image — pixtral: precomputed patch embeddings (B, S, d) from the stub
+    ViT frontend are added to token embeddings (token ids still drive the
+    LM loss, as in interleaved VLM training).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers, mamba2, transformer
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_params(key, cfg: ArchConfig):
+    k_embed, k_stack, k_head = jax.random.split(key, 3)
+    dt = _dt(cfg)
+    scale = cfg.d_model**-0.5
+    p = {}
+    if cfg.modality == "audio":
+        p["embed"] = (
+            jax.random.normal(
+                k_embed, (cfg.num_codebooks, cfg.vocab, cfg.d_model), jnp.float32
+            )
+            * scale
+        ).astype(dt)
+    else:
+        p["embed"] = (
+            jax.random.normal(k_embed, (cfg.vocab, cfg.d_model), jnp.float32) * scale
+        ).astype(dt)
+    p["stack"] = transformer.stack_init(k_stack, cfg)
+    p["final_norm"] = layers.rmsnorm_init(cfg)
+    if cfg.modality == "audio":
+        p["head"] = (
+            jax.random.normal(
+                k_head, (cfg.num_codebooks, cfg.d_model, cfg.vocab), jnp.float32
+            )
+            * scale
+        ).astype(dt)
+    elif not cfg.tie_embeddings:
+        p["head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab), jnp.float32) * scale
+        ).astype(dt)
+    return p
+
+
+def embed(params, tokens, cfg: ArchConfig, patch_embeds=None, mesh=None):
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.modality == "audio":
+        # tokens: (B, S, n_codebooks) — sum the per-codebook embeddings
+        x = sum(
+            params["embed"][c][tokens[..., c]] for c in range(cfg.num_codebooks)
+        ).astype(cd)
+    else:
+        x = params["embed"][tokens].astype(cd)
+    if cfg.modality == "image" and patch_embeds is not None:
+        x = x + patch_embeds.astype(cd)
+    return constrain(x, mesh, "batch", "model", None)
+
+
+def unembed(params, x, cfg: ArchConfig):
+    """Returns logits; audio: (B, S, C, V), else (B, S, V)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.modality == "audio":
+        return jnp.einsum("bsd,cdv->bscv", x, params["head"].astype(cd))
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return x @ w.astype(cd)
+
+
+def forward(params, tokens, cfg: ArchConfig, *, patch_embeds=None, mesh=None):
+    """Teacher-forced forward. Returns (logits, aux)."""
+    s = tokens.shape[1]
+    x = embed(params, tokens, cfg, patch_embeds, mesh=mesh)
+    positions = jnp.arange(s)
+    x, _, aux = transformer.stack_apply(params["stack"], x, positions, cfg, mesh=mesh)
+    x = layers.rmsnorm_apply(params["final_norm"], x, cfg)
+    logits = unembed(params, x, cfg)
+    if cfg.modality == "audio":
+        logits = constrain(logits, mesh, "batch", None, None, "model")
+    else:
+        logits = constrain(logits, mesh, "batch", None, "model")
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, mesh=None, aux_weight=0.01):
+    """Mean next-token cross-entropy (fp32 log-softmax) + MoE aux loss.
+
+    The gold-logit term is a one-hot contraction, NOT take_along_axis: a
+    gather along the vocab axis would force GSPMD to all-gather the
+    model-sharded logits (hundreds of GiB at production shapes), while
+    the compare+select+reduce fuses and keeps the vocab axis sharded.
+    """
+    logits, aux = forward(
+        params, batch["tokens"], cfg, patch_embeds=batch.get("patch_embeds"),
+        mesh=mesh,
+    )
+    labels = batch["labels"]
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    onehot = (vocab_iota == labels[..., None]).astype(jnp.float32)
+    gold = jnp.sum(logits32 * onehot, axis=-1)
+    nll = (lse - gold).mean()
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+# ============================== serving =======================================
+def prefill(params, tokens, cfg: ArchConfig, *, patch_embeds=None, mesh=None):
+    """Serving prefill: run the full prompt, build the KV/SSM cache, and
+    return the last-position logits (next-token distribution) + cache."""
+    s = tokens.shape[1]
+    x = embed(params, tokens, cfg, patch_embeds, mesh=mesh)
+    positions = jnp.arange(s)
+    x, caches, _ = transformer.stack_apply(
+        params["stack"], x, positions, cfg, mesh=mesh, collect_cache=True
+    )
+    x = layers.rmsnorm_apply(params["final_norm"], x[:, -1:], cfg)
+    logits = unembed(params, x, cfg)
+    return jnp.argmax(logits, axis=-1), logits, caches
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    """Stacked per-layer cache pytree sized for ``seq_len``."""
+    def attn_cache():
+        return layers.attention_cache_init(cfg, batch, seq_len)
+
+    def stack_leaves(n, fn):
+        one = fn()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), one)
+
+    if cfg.family in ("dense", "moe"):
+        return stack_leaves(cfg.num_layers, attn_cache)
+    if cfg.family == "ssm":
+        return stack_leaves(
+            cfg.num_layers, lambda: mamba2.mamba_cache_init(cfg, batch)
+        )
+    if cfg.family == "hybrid":
+        period = cfg.hybrid_period
+        n_groups, tail = divmod(cfg.num_layers, period)
+        mcache = lambda: mamba2.mamba_cache_init(cfg, batch)
+        grp = stack_leaves(n_groups * period, mcache)
+        grp = jax.tree.map(
+            lambda a: a.reshape((n_groups, period) + a.shape[1:]), grp
+        )
+        out = {"groups": grp, "shared_attn": stack_leaves(n_groups, attn_cache)}
+        if tail:
+            out["tail"] = stack_leaves(tail, mcache)
+        return out
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig, *,
+                patch_embeds=None, mesh=None):
+    """One token for every sequence in the batch.
+
+    tokens: (B, 1) (audio: (B, 1, C)); pos: scalar absolute position.
+    Returns (next_token_ids, logits, new_cache).
+    """
+    x = embed(params, tokens, cfg, patch_embeds, mesh=mesh)
+    positions = jnp.full((1,), pos, jnp.int32)
+    x, new_cache, _ = transformer.stack_apply(
+        params["stack"], x, positions, cfg, caches=cache, pos=pos, mesh=mesh
+    )
+    x = layers.rmsnorm_apply(params["final_norm"], x, cfg)
+    logits = unembed(params, x, cfg)
+    next_ids = jnp.argmax(logits, axis=-1)
+    return next_ids, logits, new_cache
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

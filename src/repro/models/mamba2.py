@@ -1,0 +1,143 @@
+"""Mamba2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Layer = projections -> causal depthwise conv (x, B, C streams) -> SSD ->
+gated RMSNorm -> out_proj. The SSD core routes through
+``kernels.ops.ssd`` (Pallas chunked kernel on TPU / chunked-scan XLA
+fallback). Decode carries a (conv_state, ssd_state) cache — O(1) per
+token, which is why the ssm/hybrid archs are assigned the 500k decode.
+
+TPU-sharding note: the reference CUDA implementation fuses one in_proj
+of width 2*d_inner + 2*d_state + n_heads; we keep separate weights per
+stream so the d_inner dimension shards cleanly on the ``model`` mesh axis
+(the fused layout slices across shard boundaries). XLA fuses the matmuls
+back together at compile time, so this costs nothing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def mamba_init(key, cfg: ArchConfig):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, k = cfg.ssm_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 11)
+    dt = _dt(cfg)
+    nrm = lambda kk, shape, s: (jax.random.normal(kk, shape, jnp.float32) * s).astype(dt)
+    return {
+        "wz": nrm(ks[0], (d, di), d**-0.5),
+        "wx": nrm(ks[1], (d, di), d**-0.5),
+        "wb": nrm(ks[2], (d, n), d**-0.5),
+        "wc": nrm(ks[3], (d, n), d**-0.5),
+        "wdt": nrm(ks[4], (d, h), d**-0.5),
+        "conv_x": nrm(ks[5], (k, di), 0.5),
+        "conv_b": nrm(ks[6], (k, n), 0.5),
+        "conv_c": nrm(ks[7], (k, n), 0.5),
+        "conv_bias_x": jnp.zeros((di,), dt),
+        "conv_bias_b": jnp.zeros((n,), dt),
+        "conv_bias_c": jnp.zeros((n,), dt),
+        "a_log": jnp.log(
+            jax.random.uniform(ks[8], (h,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.exp(
+                jax.random.uniform(ks[9], (h,), jnp.float32, minval=1e-3, maxval=0.1)
+            )
+            - 1.0
+        ),
+        "norm_scale": jnp.ones((di,), dt),
+        "out_proj": nrm(ks[10], (di, d), di**-0.5),
+    }
+
+
+def _causal_conv(x, w, bias, cache=None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C); cache: (B, K-1, C)."""
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    new_cache = xp[:, -(k - 1) :, :]
+    return out + bias[None, None, :], new_cache
+
+
+def mamba_apply(params, x_in, cfg: ArchConfig, *, cache=None, collect_state=False,
+                mesh=None):
+    """x_in: (B, S, d). cache: {"conv_x","conv_b","conv_c","ssd"} or None.
+    Returns (out (B, S, d), new_cache)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    bsz, s, _ = x_in.shape
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    x_in = x_in.astype(cd)
+
+    z = constrain(x_in @ params["wz"].astype(cd), mesh, "batch", None, "model")
+    xs = constrain(x_in @ params["wx"].astype(cd), mesh, "batch", None, "model")
+    b = x_in @ params["wb"].astype(cd)
+    c = x_in @ params["wc"].astype(cd)
+    dt_raw = x_in @ params["wdt"].astype(cd)
+
+    cx = None if cache is None else cache["conv_x"]
+    cb = None if cache is None else cache["conv_b"]
+    cc = None if cache is None else cache["conv_c"]
+    xs, ncx = _causal_conv(xs, params["conv_x"].astype(cd),
+                           params["conv_bias_x"].astype(cd), cache=cx)
+    b, ncb = _causal_conv(b, params["conv_b"].astype(cd),
+                          params["conv_bias_b"].astype(cd), cache=cb)
+    c, ncc = _causal_conv(c, params["conv_c"].astype(cd),
+                          params["conv_bias_c"].astype(cd), cache=cc)
+    xs = jax.nn.silu(xs).reshape(bsz, s, h, p)
+    xs = constrain(xs, mesh, "batch", None, "model", None)
+    b = jax.nn.silu(b)
+    c = jax.nn.silu(c)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )  # (B, S, H)
+
+    if cache is None:
+        y, _state = ops.ssd(
+            xs, dt, params["a_log"], b, c, params["d_skip"],
+            chunk=cfg.ssm_chunk, backend=cfg.kernel_backend,
+        )
+        new_cache = None
+        if collect_state:
+            new_cache = {"conv_x": ncx, "conv_b": ncb, "conv_c": ncc, "ssd": _state}
+    else:
+        y, state = ops.ssd_decode(
+            cache["ssd"], xs[:, 0], dt[:, 0], params["a_log"], b[:, 0], c[:, 0],
+            params["d_skip"],
+        )
+        y = y[:, None]  # (B, 1, H, P)
+        new_cache = {"conv_x": ncx, "conv_b": ncb, "conv_c": ncc, "ssd": state}
+
+    y = y.reshape(bsz, s, cfg.d_inner)
+    # gated RMSNorm (mamba2: norm(y * silu(z)))
+    y = y * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y32), axis=-1, keepdims=True) + 1e-6)
+    y = ((y32 / rms) * params["norm_scale"].astype(jnp.float32)).astype(cd)
+    return y @ params["out_proj"].astype(cd), new_cache
+
+
+def mamba_cache_init(cfg: ArchConfig, batch: int, dtype=None):
+    dt = dtype or jnp.dtype(cfg.compute_dtype)
+    k = cfg.ssm_conv - 1
+    return {
+        "conv_x": jnp.zeros((batch, k, cfg.d_inner), dt),
+        "conv_b": jnp.zeros((batch, k, cfg.ssm_state), dt),
+        "conv_c": jnp.zeros((batch, k, cfg.ssm_state), dt),
+        "ssd": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+    }

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptState,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+)

@@ -1,0 +1,91 @@
+"""Functional AdamW (optax is not available in this environment).
+
+API mirrors optax: ``init_fn(params) -> state``, ``update_fn(grads, state,
+params) -> (updates, state)``; apply with ``apply_updates``. Supports
+bf16 moment storage (``moment_dtype``) — required to fit 100B+ parameter
+optimizer state in HBM (see DESIGN.md §5) — plus global-norm clipping and
+cosine LR schedules with linear warmup.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        warm = peak_lr * (step + 1) / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adamw(
+    lr: float | Callable,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    moment_dtype=jnp.float32,
+    scan_stacked: bool = False,
+):
+    """``scan_stacked``: apply the update to stacked (layer-major, ndim>=3)
+    leaves one slice at a time via lax.map — the fp32 working copies then
+    size with ONE layer, not the whole 126-layer stack (saves ~6 GiB/dev
+    on llama3-405b; see EXPERIMENTS.md §Perf)."""
+    sched = lr if callable(lr) else (lambda _: lr)
+
+    def init_fn(params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update_fn(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = sched(step)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+            mhat = m32 / (1 - b1**step)
+            vhat = v32 / (1 - b2**step)
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype), m32.astype(moment_dtype), v32.astype(moment_dtype)
+
+        def upd_leaf(g, m, v, p):
+            if scan_stacked and g.ndim >= 3 and g.shape[0] > 1:
+                return jax.lax.map(lambda t: upd(*t), (g, m, v, p))
+            return upd(g, m, v, p)
+
+        out = jax.tree.map(upd_leaf, grads, state.mu, state.nu, params)
+        updates = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    return init_fn, update_fn
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,8 @@
+import os
+import sys
+from pathlib import Path
+
+# tests run on the single real CPU device (the 512-device farm is ONLY for
+# the dry-run entry point, which sets XLA_FLAGS itself before jax init)
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,101 @@
+"""Deliverable (f): per-architecture smoke tests.
+
+Every assigned arch instantiates a REDUCED same-family config and runs one
+forward + one train step on CPU, asserting output shapes and no NaNs. The
+full configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch, list_archs, reduced
+from repro.models import lm
+from repro.models.train import make_train_step
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, key, b=2, s=16):
+    if cfg.modality == "audio":
+        toks = jax.random.randint(key, (b, s, cfg.num_codebooks), 0, cfg.vocab)
+    else:
+        toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.modality == "image":
+        batch["patch_embeds"] = jnp.zeros((b, s, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced(get_arch(arch))
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg, jax.random.key(1))
+    logits, aux = jax.jit(lambda p, t: lm.forward(p, t, cfg,
+                                                  patch_embeds=batch.get("patch_embeds")))(
+        params, batch["tokens"]
+    )
+    b, s = batch["tokens"].shape[:2]
+    if cfg.modality == "audio":
+        assert logits.shape == (b, s, cfg.num_codebooks, cfg.vocab)
+    else:
+        assert logits.shape == (b, s, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_no_nans(arch):
+    cfg = reduced(get_arch(arch))
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg, jax.random.key(1))
+    opt_init, step = make_train_step(cfg)
+    params2, _, metrics = jax.jit(step)(params, opt_init(params), batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert metrics["loss"] > 0
+    nan_leaves = [
+        p for p in jax.tree.leaves(params2)
+        if bool(jnp.any(jnp.isnan(p.astype(jnp.float32))))
+    ]
+    assert not nan_leaves
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_exact_assigned_config_values(arch):
+    """The full (non-reduced) configs carry the exact assigned numbers."""
+    cfg = get_arch(arch)
+    expected = {
+        "llama3_405b": (126, 16384, 128, 8, 53248, 128256),
+        "smollm_135m": (30, 576, 9, 3, 1536, 49152),
+        "starcoder2_3b": (30, 3072, 24, 2, 12288, 49152),
+        "qwen3_32b": (64, 5120, 64, 8, 25600, 151936),
+        "musicgen_medium": (48, 1536, 24, 24, 6144, 2048),
+        "pixtral_12b": (40, 5120, 32, 8, 14336, 131072),
+        "mixtral_8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "qwen3_moe_235b_a22b": (94, 4096, 64, 4, 1536, 151936),
+        "mamba2_2p7b": (64, 2560, 0, 0, 0, 50280),
+        "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected
+
+
+def test_param_counts_in_expected_range():
+    """param_count() should land near the named sizes."""
+    for arch, lo, hi in [
+        ("llama3_405b", 380e9, 430e9),
+        ("smollm_135m", 0.12e9, 0.15e9),
+        ("starcoder2_3b", 2.5e9, 3.5e9),
+        ("mixtral_8x7b", 42e9, 50e9),
+        ("qwen3_moe_235b_a22b", 210e9, 250e9),
+        ("mamba2_2p7b", 2.2e9, 3.0e9),
+        ("zamba2_7b", 6e9, 8.5e9),
+    ]:
+        n = get_arch(arch).param_count()
+        assert lo < n < hi, (arch, n)
+
+
+def test_moe_active_params():
+    cfg = get_arch("qwen3_moe_235b_a22b")
+    assert cfg.active_param_count() < 0.15 * cfg.param_count()

@@ -1,0 +1,34 @@
+"""Random/Greedy baseline policies (paper §IV.A)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, env as env_lib
+from repro.core.types import Action
+
+
+def test_greedy_picks_nearest_compatible():
+    p = env_lib.default_params(num_eds=3, num_models=3)
+    state = env_lib.reset(jax.random.key(0), p)
+    obs = env_lib.observe(state, p)
+    act = baselines.greedy_policy(None, obs, p)
+    compat = state.cache[:, state.task.mu].T  # (M, N)
+    dist = jnp.linalg.norm(
+        state.es_pos[None] - state.ed_pos[:, None], axis=-1
+    )
+    for m in range(p.num_eds):
+        if float(compat[m].max()) > 0.5:
+            cands = jnp.where(compat[m] > 0.5, dist[m], jnp.inf)
+            assert int(act.target[m]) == int(jnp.argmin(cands)) + 1
+            assert float(act.eta[m]) == 1.0  # paper: fixed ratio 1.0
+        else:
+            assert int(act.target[m]) == 0  # local fallback
+    assert bool(jnp.all(act.beta == 0))
+
+
+def test_random_policy_in_bounds():
+    p = env_lib.default_params(num_eds=16, num_models=3)
+    state = env_lib.reset(jax.random.key(1), p)
+    obs = env_lib.observe(state, p)
+    act = baselines.random_policy(jax.random.key(2), obs, p)
+    assert bool(jnp.all((act.target >= 0) & (act.target <= p.num_ess)))
+    assert bool(jnp.all((act.eta >= 0) & (act.eta <= 1)))

@@ -1,0 +1,67 @@
+"""Pin every printed equation of paper §II.C (eqs. 3-15)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import costs
+
+
+def test_eq3_local_latency():
+    # T = x(1-eta)rho / f
+    assert costs.local_latency(8e6, 0.25, 100.0, 2e9) == pytest.approx(
+        8e6 * 0.75 * 100 / 2e9
+    )
+
+
+def test_eq4_local_energy_faithful_has_no_eta():
+    e1 = costs.local_energy_faithful(8e6, 0.0, 100.0, 1e-28, 2e9)
+    e2 = costs.local_energy_faithful(8e6, 0.9, 100.0, 1e-28, 2e9)
+    assert e1 == e2  # printed equation ignores eta
+    assert e1 == pytest.approx(1e-28 * (2e9) ** 2 * 8e6 * 100)
+
+
+def test_eq4_corrected_scales_with_local_share():
+    e = costs.local_energy_corrected(8e6, 0.25, 100.0, 1e-28, 2e9)
+    assert e == pytest.approx(1e-28 * 4e18 * 8e6 * 0.75 * 100)
+
+
+def test_eq5_eq6_transmission():
+    t = costs.trans_latency(8e6, 0.5, 50e6)
+    assert t == pytest.approx(4e6 / 50e6)
+    assert costs.trans_energy(0.5, t) == pytest.approx(0.5 * t)
+
+
+def test_eq7_eq8_switching():
+    t = costs.switch_latency(200 * 8e6, 1e9)
+    assert t == pytest.approx(1.6)
+    assert costs.switch_energy(2.0, t) == pytest.approx(3.2)
+
+
+def test_eq9_eq10_edge():
+    assert costs.edge_latency(8e6, 0.5, 100.0, 7e9) == pytest.approx(
+        4e6 * 100 / 7e9
+    )
+    e = costs.edge_energy_corrected(8e6, 0.5, 100.0, 1e-29, 7e9)
+    assert e == pytest.approx(1e-29 * 49e18 * 4e6 * 100)
+
+
+def test_eq11_12_totals_additive():
+    assert costs.edge_total_latency(1.0, 2.0, 3.0) == 6.0
+    assert costs.edge_total_energy(1.0, 2.0, 3.0) == 6.0
+
+
+def test_eq13_14_max_semantics():
+    assert costs.total_latency(2.0, 3.0) == 3.0
+    assert costs.total_energy(2.0, 3.0, faithful=True) == 3.0  # max as printed
+    assert costs.total_energy(2.0, 3.0, faithful=False) == 5.0  # physical sum
+
+
+def test_eq15_objective():
+    assert costs.objective(2.0, 4.0, 0.5, 0.5) == 3.0
+
+
+def test_shannon_rate_monotone_in_distance():
+    g_near = costs.channel_gain(100.0, 1e-3, 3.0)
+    g_far = costs.channel_gain(500.0, 1e-3, 3.0)
+    r_near = costs.shannon_rate(20e6, 0.5, g_near, 3.98e-21)
+    r_far = costs.shannon_rate(20e6, 0.5, g_far, 3.98e-21)
+    assert float(r_near) > float(r_far) > 0

@@ -1,0 +1,80 @@
+"""Serving-path correctness: token-by-token decode must reproduce the
+teacher-forced forward for every family, and prefill must hand off a cache
+that decode can continue exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import lm
+
+FAMILIES = ["smollm_135m", "mixtral_8x7b", "mamba2_2p7b", "zamba2_7b"]
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_decode_matches_teacher_forced(arch):
+    cfg = reduced(get_arch(arch))
+    params = lm.init_params(jax.random.key(0), cfg)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    logits_tf, _ = jax.jit(lambda p, t: lm.forward(p, t, cfg))(params, toks)
+    cache = lm.init_cache(cfg, B, S)
+    step = jax.jit(lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg))
+    outs = []
+    for i in range(S):
+        _, logits, cache = step(params, cache, toks[:, i : i + 1], jnp.int32(i))
+        outs.append(logits[:, 0])
+    np.testing.assert_allclose(
+        jnp.stack(outs, 1), logits_tf, atol=5e-5, rtol=5e-5
+    )
+
+
+@pytest.mark.parametrize("arch", ["smollm_135m", "mamba2_2p7b"])
+def test_prefill_then_decode_continues(arch):
+    """prefill(toks[:p]) cache + decode of later tokens == teacher-forced."""
+    cfg = reduced(get_arch(arch))
+    params = lm.init_params(jax.random.key(0), cfg)
+    B, S, P = 1, 8, 5
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab)
+    logits_tf, _ = lm.forward(params, toks, cfg)
+
+    _, last_logits, cache = lm.prefill(params, toks[:, :P], cfg)
+    np.testing.assert_allclose(
+        last_logits[:, 0], logits_tf[:, P - 1], atol=5e-5, rtol=5e-5
+    )
+    # attention prefill caches are sized P; decode needs room — re-seat into
+    # a full-size cache buffer
+    full = lm.init_cache(cfg, B, S)
+
+    def seat(dst, src):
+        if src.shape == dst.shape:
+            return src.astype(dst.dtype)
+        pad = [(0, d - s) for d, s in zip(dst.shape, src.shape)]
+        return jnp.pad(src, pad).astype(dst.dtype)
+
+    cache = jax.tree.map(lambda d, s: seat(d, s), full, cache)
+    for i in range(P, S):
+        _, logits, cache = lm.decode_step(
+            params, cache, toks[:, i : i + 1], jnp.int32(i), cfg
+        )
+        np.testing.assert_allclose(
+            logits[:, 0], logits_tf[:, i], atol=5e-5, rtol=5e-5
+        )
+
+
+def test_sliding_window_cache_matches_full_for_short_seq():
+    cfg = reduced(get_arch("mixtral_8x7b"))
+    assert cfg.window > 0
+    params = lm.init_params(jax.random.key(0), cfg)
+    B, S = 1, 8  # S < window: ring cache must behave like a full cache
+    toks = jax.random.randint(jax.random.key(3), (B, S), 0, cfg.vocab)
+    logits_tf, _ = lm.forward(params, toks, cfg)
+    cache = lm.init_cache(cfg, B, S)
+    for i in range(S):
+        _, logits, cache = lm.decode_step(
+            params, cache, toks[:, i : i + 1], jnp.int32(i), cfg
+        )
+        np.testing.assert_allclose(
+            logits[:, 0], logits_tf[:, i], atol=5e-5, rtol=5e-5
+        )

@@ -1,0 +1,109 @@
+"""Environment invariants (paper §II) under random policies."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import baselines, env as env_lib
+from repro.core.types import Action
+
+
+@pytest.fixture(scope="module")
+def p():
+    return env_lib.default_params(num_eds=6, num_models=4)
+
+
+def _rollout(p, policy, steps=12, key=0):
+    key = jax.random.key(key)
+    state = env_lib.reset(key, p)
+    outs = []
+    for _ in range(steps):
+        key, k = jax.random.split(key)
+        obs = env_lib.observe(state, p)
+        act = policy(k, obs, p)
+        state, obs, out, done = env_lib.step(state, act, p)
+        outs.append(out)
+    return state, outs
+
+
+def test_cache_capacity_invariant(p):
+    state, _ = _rollout(p, baselines.random_policy, steps=30)
+    per_es = state.cache.sum(axis=1)
+    assert bool(jnp.all(per_es <= p.cache_slots))
+    assert bool(jnp.all((state.cache == 0) | (state.cache == 1)))
+
+
+def test_outcome_ranges(p):
+    _, outs = _rollout(p, baselines.random_policy)
+    for o in outs:
+        assert bool(jnp.all(o.latency >= 0))
+        assert bool(jnp.all(o.energy >= 0))
+        assert bool(jnp.all((o.completed == 0) | (o.completed == 1)))
+        assert bool(jnp.all(o.reward <= 0))  # reward is cost-negative
+
+
+def test_local_only_never_fails_compat(p):
+    local = lambda k, obs, p_: Action(
+        target=jnp.zeros((p_.num_eds,), jnp.int32),
+        eta=jnp.zeros((p_.num_eds,)),
+        beta=jnp.zeros((p_.num_eds,)),
+    )
+    _, outs = _rollout(p, local)
+    for o in outs:
+        assert bool(jnp.all(o.failed_compat == 0))
+        assert bool(jnp.all(o.switch_latency == 0))
+
+
+def test_download_updates_cache(p):
+    """Forcing downloads to one ES eventually caches the requested models."""
+    def policy(k, obs, p_):
+        return Action(
+            target=jnp.ones((p_.num_eds,), jnp.int32),  # all to ES 0
+            eta=jnp.full((p_.num_eds,), 0.5),
+            beta=jnp.ones((p_.num_eds,)),
+        )
+
+    state, outs = _rollout(p, policy, steps=20)
+    # some downloads must have happened (switch latency observed)
+    assert any(float(o.switch_latency.sum()) > 0 for o in outs)
+    assert float(state.cache[0].sum()) == p.cache_slots  # ES 0 full (LRU)
+
+
+def test_deadline_violation_marks_incomplete(p):
+    """eta=0 on huge local tasks -> slow EDs must miss the deadline."""
+    import dataclasses
+    slow = p._replace(task_mb_lo=20.0, task_mb_hi=20.0, rho_lo=100.0,
+                      rho_hi=100.0, f_ed_lo=1e9, f_ed_hi=1e9)
+    local = lambda k, obs, p_: Action(
+        target=jnp.zeros((p_.num_eds,), jnp.int32),
+        eta=jnp.zeros((p_.num_eds,)),
+        beta=jnp.zeros((p_.num_eds,)),
+    )
+    _, outs = _rollout(slow, local)
+    comp = jnp.stack([o.completed for o in outs])
+    assert float(comp.mean()) < 0.1  # 1.6e10 cycles at 1 GHz >> 5 s deadline
+
+
+def test_observation_layout(p):
+    state = env_lib.reset(jax.random.key(0), p)
+    obs = env_lib.observe(state, p)
+    assert obs.shape == (p.num_eds, env_lib.obs_dim(p))
+    # compat slice must mirror cache rows for each agent's needed model
+    sl = baselines._obs_slices(p)
+    compat = obs[:, sl["compat"][0]:sl["compat"][1]]
+    need = state.task.mu
+    expected = state.cache[:, need].T
+    assert bool(jnp.all(compat == expected))
+
+
+def test_contention_raises_latency(p):
+    """All agents on one ES must be slower than spreading across ESs."""
+    key = jax.random.key(3)
+    state = env_lib.reset(key, p)
+    m = p.num_eds
+    crowd = Action(target=jnp.ones((m,), jnp.int32),
+                   eta=jnp.ones((m,)), beta=jnp.ones((m,)))
+    spread = Action(target=(jnp.arange(m) % p.num_ess + 1).astype(jnp.int32),
+                    eta=jnp.ones((m,)), beta=jnp.ones((m,)))
+    _, _, out_crowd, _ = env_lib.step(state, crowd, p)
+    _, _, out_spread, _ = env_lib.step(state, spread, p)
+    assert float(out_crowd.latency.mean()) > float(out_spread.latency.mean())

@@ -1,0 +1,28 @@
+"""Fused RMSNorm kernel vs oracle across shapes/dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.rmsnorm import rmsnorm
+
+
+@pytest.mark.parametrize("shape", [(4, 64, 256), (2, 128), (3, 5, 7, 64), (1, 100)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches(shape, dtype):
+    key = jax.random.key(sum(shape))
+    x = jax.random.normal(key, shape, dtype)
+    scale = jnp.linspace(0.5, 1.5, shape[-1]).astype(dtype)
+    out = rmsnorm(x, scale, interpret=True)
+    exp = ref.rmsnorm_naive(x, scale)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), exp.astype(jnp.float32), atol=2e-2, rtol=2e-2
+    )
+
+
+def test_rmsnorm_unit_rms():
+    x = jax.random.normal(jax.random.key(0), (64, 128)) * 7.0
+    out = rmsnorm(x, jnp.ones((128,)), interpret=True)
+    rms = jnp.sqrt(jnp.mean(out**2, axis=-1))
+    np.testing.assert_allclose(rms, jnp.ones_like(rms), atol=1e-3)

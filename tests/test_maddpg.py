@@ -1,0 +1,104 @@
+"""MADDPG algorithm mechanics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import env as env_lib, maddpg, networks
+from repro.core.types import action_dim
+
+
+def _setup(centralized=True, model_aware=True):
+    p = env_lib.default_params(num_eds=4, num_models=3)
+    cfg = maddpg.AlgoConfig(
+        hidden=32, critic_hidden=32, batch_size=16, buffer_capacity=64,
+        total_steps=40, warmup=8, update_every=4, n_envs=2,
+        centralized_critic=centralized, model_aware=model_aware,
+    )
+    return p, cfg
+
+
+def test_policy_action_shapes_and_ranges():
+    p, cfg = _setup()
+    ts = maddpg.init_state(jax.random.key(0), p, cfg)
+    obs = jnp.zeros((p.num_eds, env_lib.obs_dim(p)))
+    act = maddpg.policy_action(ts.actor, obs, p, cfg, jax.random.key(1), 1.0)
+    assert act.target.shape == (p.num_eds,)
+    assert bool(jnp.all((act.target >= 0) & (act.target <= p.num_ess)))
+    assert bool(jnp.all((act.eta >= 0) & (act.eta <= 1)))
+    assert set(np.unique(np.asarray(act.beta))) <= {0.0, 1.0}
+
+
+def test_nomodel_masks_compat_and_downloads():
+    p, cfg = _setup(model_aware=False)
+    obs = jnp.ones((p.num_eds, env_lib.obs_dim(p)))
+    masked = maddpg._mask_obs(obs, p, model_aware=False)
+    import repro.core.baselines as bl
+    sl = bl._obs_slices(p)
+    assert bool(jnp.all(masked[:, sl["compat"][0]:sl["compat"][1]] == 0))
+    ts = maddpg.init_state(jax.random.key(0), p, cfg)
+    act = maddpg.policy_action(ts.actor, masked, p, cfg, jax.random.key(1), 1.0)
+    assert bool(jnp.all(act.beta == 0))
+
+
+def test_soft_update_interpolates():
+    a = {"w": jnp.zeros((2,))}
+    b = {"w": jnp.ones((2,))}
+    out = networks.soft_update(a, b, tau=0.25)
+    np.testing.assert_allclose(out["w"], jnp.full((2,), 0.25))
+
+
+def test_update_reduces_critic_loss_on_fixed_batch():
+    p, cfg = _setup()
+    ts = maddpg.init_state(jax.random.key(0), p, cfg)
+    key = jax.random.key(1)
+    d, g, a = env_lib.obs_dim(p), env_lib.global_dim(p), action_dim(p.num_ess)
+    m, b = p.num_eds, cfg.batch_size
+    ks = jax.random.split(key, 7)
+    batch = {
+        "obs": jax.random.normal(ks[0], (b, m, d)),
+        "act": jax.random.uniform(ks[1], (b, m, a)),
+        "rew": jax.random.normal(ks[2], (b, m)),
+        "next_obs": jax.random.normal(ks[3], (b, m, d)),
+        "done": jnp.zeros((b,)),
+        "gstate": jax.random.uniform(ks[4], (b, g)),
+        "next_gstate": jax.random.uniform(ks[5], (b, g)),
+    }
+
+    def critic_loss(ts_):
+        next_act = jax.vmap(
+            lambda o: maddpg._soft_action(ts_.target_actor, o, p, cfg)
+        )(batch["next_obs"])
+        q_next = networks.stacked_apply(
+            ts_.target_critic,
+            maddpg._critic_inputs(batch["next_obs"], batch["next_gstate"],
+                                  next_act, p, cfg),
+        )[..., 0]
+        y = jnp.swapaxes(batch["rew"], 0, 1) + cfg.gamma * q_next
+        q = networks.stacked_apply(
+            ts_.critic,
+            maddpg._critic_inputs(batch["obs"], batch["gstate"], batch["act"],
+                                  p, cfg),
+        )[..., 0]
+        return float(jnp.mean((q - y) ** 2))
+
+    before = critic_loss(ts)
+    ts2 = ts
+    for _ in range(20):
+        ts2 = maddpg.update(ts2, batch, key, p, cfg)
+    after = critic_loss(ts2)
+    assert after < before
+
+
+def test_saddpg_critic_input_is_local():
+    p, cfg = _setup(centralized=False)
+    assert maddpg.critic_in_dim(p, cfg) == env_lib.obs_dim(p) + action_dim(p.num_ess)
+    p2, cfg2 = _setup(centralized=True)
+    assert maddpg.critic_in_dim(p2, cfg2) > maddpg.critic_in_dim(p, cfg)
+
+
+def test_train_short_run_finishes_and_metrics_finite():
+    p, cfg = _setup()
+    ts, metrics = maddpg.train_jit(jax.random.key(0), p, cfg)
+    assert metrics["reward"].shape == (cfg.total_steps,)
+    assert bool(jnp.all(jnp.isfinite(metrics["reward"])))
+    assert bool(jnp.all(jnp.isfinite(metrics["completion"])))

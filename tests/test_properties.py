@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costs, env as env_lib, replay
+from repro.core.types import Action
+from repro.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    x=st.floats(1e5, 2e8), eta=st.floats(0, 1), rho=st.floats(1, 500),
+    f=st.floats(5e8, 1e10),
+)
+@settings(**SETTINGS)
+def test_latency_nonneg_and_monotone_in_compute(x, eta, rho, f):
+    t = float(costs.local_latency(x, eta, rho, f))
+    t_faster = float(costs.local_latency(x, eta, rho, 2 * f))
+    assert t >= 0
+    assert t_faster <= t + 1e-9
+
+
+@given(
+    t_local=st.floats(0, 100), t_edge=st.floats(0, 100),
+    e_local=st.floats(0, 100), e_edge=st.floats(0, 100),
+)
+@settings(**SETTINGS)
+def test_totals_bounds(t_local, t_edge, e_local, e_edge):
+    t = float(costs.total_latency(t_local, t_edge))
+    assert abs(t - max(t_local, t_edge)) <= 1e-5 * max(1.0, t)  # f32 rounding
+    e_f = float(costs.total_energy(e_local, e_edge, True))
+    e_c = float(costs.total_energy(e_local, e_edge, False))
+    assert e_f <= e_c + 1e-5  # max <= sum for nonnegatives
+
+
+@given(
+    seed=st.integers(0, 2**16), m=st.integers(2, 8), k=st.integers(2, 5),
+    target=st.integers(0, 3), eta=st.floats(0, 1),
+)
+@settings(**SETTINGS)
+def test_env_step_invariants(seed, m, k, target, eta):
+    p = env_lib.default_params(num_eds=m, num_models=k)
+    state = env_lib.reset(jax.random.key(seed), p)
+    act = Action(
+        target=jnp.full((m,), min(target, p.num_ess), jnp.int32),
+        eta=jnp.full((m,), eta),
+        beta=jnp.ones((m,)),
+    )
+    nxt, obs, out, done = env_lib.step(state, act, p)
+    assert bool(jnp.all(out.latency >= 0)) and bool(jnp.all(out.energy >= 0))
+    assert bool(jnp.all(nxt.cache.sum(axis=1) <= p.cache_slots))
+    assert obs.shape == (m, env_lib.obs_dim(p))
+    assert bool(jnp.all(jnp.isfinite(obs)))
+
+
+@given(cap=st.integers(2, 16), writes=st.integers(1, 40))
+@settings(**SETTINGS)
+def test_replay_size_never_exceeds_capacity(cap, writes):
+    buf = replay.init(cap, {"x": jnp.zeros(())})
+    for i in range(writes):
+        buf = replay.add_batch(buf, {"x": jnp.full((1,), float(i))}, 1)
+    assert int(buf.size) <= cap
+    assert int(buf.size) == min(writes, cap)
+    assert 0 <= int(buf.ptr) < cap
+
+
+@given(
+    s=st.sampled_from([32, 64, 96]), h=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunked_equals_recurrent(s, h, seed):
+    ks = jax.random.split(jax.random.key(seed), 5)
+    b, p, n = 1, 16, 8
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jax.random.normal(ks[2], (h,)) * 0.5
+    bb = jax.random.normal(ks[3], (b, s, n))
+    cc = jax.random.normal(ks[4], (b, s, n))
+    d = jnp.ones((h,))
+    y1, s1 = ref.ssd_chunked_xla(x, dt, a_log, bb, cc, d, chunk=32)
+    y2, s2 = ref.ssd_naive(x, dt, a_log, bb, cc, d)
+    np.testing.assert_allclose(y1, y2, atol=1e-3, rtol=1e-3)
+
+
+@given(
+    sq=st.sampled_from([64, 128]), win=st.sampled_from([0, 32]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=10, deadline=None)
+def test_attention_causality(sq, win, seed):
+    """Perturbing future keys must not change earlier outputs."""
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (1, sq, 2, 32))
+    k = jax.random.normal(ks[1], (1, sq, 2, 32))
+    v = jax.random.normal(ks[2], (1, sq, 2, 32))
+    out1 = ref.attention_naive(q, k, v, causal=True, window=win)
+    k2 = k.at[:, sq // 2 :].add(100.0)
+    v2 = v.at[:, sq // 2 :].add(100.0)
+    out2 = ref.attention_naive(q, k2, v2, causal=True, window=win)
+    np.testing.assert_allclose(
+        out1[:, : sq // 2], out2[:, : sq // 2], atol=1e-5, rtol=1e-5
+    )

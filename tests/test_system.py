@@ -1,0 +1,100 @@
+"""End-to-end behaviour tests for the paper's system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import env as env_lib, evaluate, maddpg
+from repro.core.catalog import build_catalog
+from repro.core.router import EdgeServer, ModelAwareRouter, Request
+
+
+def test_maddpg_training_beats_random():
+    """A short MADDPG-MATO run must outperform the random policy."""
+    p = env_lib.default_params(num_eds=6, num_models=3)
+    cfg = maddpg.AlgoConfig(
+        total_steps=1200, warmup=300, update_every=5, batch_size=128,
+        n_envs=4, hidden=64, critic_hidden=128, explore_decay_steps=800,
+    )
+    ts, metrics = maddpg.train_jit(jax.random.key(0), p, cfg)
+    trained = evaluate.evaluate_policy(
+        jax.random.key(9), "actor", p, cfg=cfg, params=ts.actor, episodes=24
+    )
+    rand = evaluate.evaluate_policy(jax.random.key(9), "random", p, episodes=24)
+    assert trained["reward"] > rand["reward"]
+    assert trained["completion"] >= rand["completion"]
+
+
+def test_reward_improves_during_training():
+    p = env_lib.default_params(num_eds=6, num_models=3)
+    cfg = maddpg.AlgoConfig(
+        total_steps=1200, warmup=300, update_every=5, batch_size=128,
+        n_envs=4, hidden=64, critic_hidden=128, explore_decay_steps=800,
+    )
+    _, metrics = maddpg.train_jit(jax.random.key(1), p, cfg)
+    r = np.asarray(metrics["reward"])
+    assert r[-200:].mean() > r[:200].mean()
+
+
+def test_catalog_grounds_paper_model_set():
+    """Eq. 2's abstract {I_i, X_i} maps to the real assigned archs."""
+    cat = build_catalog()
+    assert len(cat) == 10
+    sizes = {e.name: e.size_bits for e in cat}
+    # llama3-405b must dwarf smollm by ~3 orders of magnitude
+    assert sizes["llama3_405b"] / sizes["smollm_135m"] > 1000
+    e = next(x for x in cat if x.name == "smollm_135m")
+    # switch latency over 1 Gb/s backhaul: bf16 weights / rate (eq. 7)
+    assert abs(e.switch_latency(1e9) - e.size_bits / 1e9) < 1e-9
+
+
+def test_router_prefers_resident_models():
+    cat = build_catalog(["smollm_135m", "starcoder2_3b", "mamba2_2p7b"])
+    servers = [
+        EdgeServer("a", 1e14, 2, 1e8, 1e9, resident=[0, 1]),
+        EdgeServer("b", 1e14, 2, 1e8, 1e9, resident=[2]),
+    ]
+    router = ModelAwareRouter(servers, cat)
+    choice, _ = router.route(Request(model=2, prompt_bits=1e5, gen_tokens=4))
+    assert choice == 1  # model 2 resident on server b
+    choice, _ = router.route(Request(model=0, prompt_bits=1e5, gen_tokens=4))
+    assert choice == 0
+
+
+def test_router_lru_eviction():
+    cat = build_catalog(["smollm_135m", "starcoder2_3b", "mamba2_2p7b"])
+    srv = EdgeServer("a", 1e14, 2, 1e8, 1e9, resident=[0, 1])
+    router = ModelAwareRouter([srv], cat)
+    router.route(Request(model=1, prompt_bits=1e5, gen_tokens=1))  # touch 1
+    router.route(Request(model=2, prompt_bits=1e5, gen_tokens=1))  # insert 2
+    assert set(srv.resident) == {1, 2}  # 0 was LRU
+
+
+def test_model_aware_beats_blind_on_switch_costs():
+    """With big models and a slow backhaul, pricing switches must win."""
+    cat = build_catalog(["starcoder2_3b", "mamba2_2p7b"])
+    import numpy as np
+
+    def run(model_aware):
+        servers = [
+            EdgeServer("a", 1e14, 1, 1e8, 2e8, resident=[0]),
+            EdgeServer("b", 1e14, 1, 1e8, 2e8, resident=[1]),
+        ]
+        router = ModelAwareRouter(servers, cat)
+        rng = np.random.default_rng(0)
+        total = 0.0
+        for _ in range(30):
+            req = Request(int(rng.integers(0, 2)), 1e5, 2)
+            if model_aware:
+                _, lat = router.route(req)
+            else:  # blind round-robin
+                srv = servers[router.clock % 2]
+                lat = router._candidate_latency(srv, req)
+                router.clock += 1
+                if req.model not in srv.resident:
+                    srv.resident = [req.model]
+                srv.queue_tokens += req.gen_tokens
+            total += lat
+            router.drain(2.0)
+        return total / 30
+
+    assert run(True) < run(False)
