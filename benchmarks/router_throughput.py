@@ -1,0 +1,114 @@
+"""Router throughput: scalar reference loop vs jitted batched dispatch.
+
+Measures requests/sec for the scalar ``ModelAwareRouter`` (one Python
+call per request) against ``core.batch_router.route_batch`` (the whole
+batch in one jitted ``lax.scan``) across fleet sizes N in {4, 16, 64}
+and batch sizes B in {64, 1024, 4096}, verifying on every cell that the
+two paths agree on all routing choices.
+
+    PYTHONPATH=src python -m benchmarks.router_throughput
+
+CSV convention: ``name,us_per_call,derived`` (us per ROUTED REQUEST).
+"""
+from __future__ import annotations
+
+import copy
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch_router as br
+from repro.core.catalog import build_catalog
+from repro.core.router import EdgeServer, ModelAwareRouter, Request
+
+FLEET_SIZES = (4, 16, 64)
+BATCH_SIZES = (64, 1024, 4096)
+EDGE_ARCHS = ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
+
+
+def make_fleet(rng, n_servers, catalog, cache_slots=2):
+    return [
+        EdgeServer(
+            name=f"es{i}",
+            flops_per_s=float(rng.uniform(5e13, 2e14)),
+            cache_slots=cache_slots,
+            uplink_bps=1e8,
+            backhaul_bps=1e9,
+            resident=[(2 * i + j) % len(catalog) for j in range(cache_slots)],
+        )
+        for i in range(n_servers)
+    ]
+
+
+def make_stream(rng, n_requests, num_models):
+    return (
+        rng.integers(0, num_models, n_requests),
+        rng.uniform(1e5, 1e6, n_requests),
+        rng.integers(1, 32, n_requests),
+    )
+
+
+def time_scalar(servers, catalog, models, bits, toks):
+    router = ModelAwareRouter(copy.deepcopy(servers), catalog)
+    t0 = time.perf_counter()
+    choices = [
+        router.route(Request(int(m), float(b), int(t)))[0]
+        for m, b, t in zip(models, bits, toks)
+    ]
+    return time.perf_counter() - t0, np.array(choices)
+
+
+def time_batched(servers, catalog, models, bits, toks, repeats=3):
+    params, state = br.fleet_from_servers(servers, catalog)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+    )
+    _, out = br.route_batch(params, state, reqs)  # compile
+    jax.block_until_ready(out.choice)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _, out = br.route_batch(params, state, reqs)
+        jax.block_until_ready(out.choice)
+        best = min(best, time.perf_counter() - t0)
+    return best, np.asarray(out.choice)
+
+
+def run_cell(n_servers, n_requests, seed=0):
+    catalog = build_catalog(EDGE_ARCHS)
+    rng = np.random.default_rng(seed)
+    servers = make_fleet(rng, n_servers, catalog)
+    models, bits, toks = make_stream(rng, n_requests, len(catalog))
+    t_scalar, c_scalar = time_scalar(servers, catalog, models, bits, toks)
+    t_batch, c_batch = time_batched(servers, catalog, models, bits, toks)
+    assert np.array_equal(c_scalar, c_batch), (
+        f"batched router diverged from scalar oracle at N={n_servers} "
+        f"B={n_requests}"
+    )
+    return t_scalar, t_batch
+
+
+def main(fleet_sizes=FLEET_SIZES, batch_sizes=BATCH_SIZES, header=True):
+    if header:  # run.py already printed the combined-stream header
+        print("name,us_per_call,derived")
+    for n in fleet_sizes:
+        for b in batch_sizes:
+            t_scalar, t_batch = run_cell(n, b)
+            us_s = t_scalar / b * 1e6
+            us_b = t_batch / b * 1e6
+            print(
+                f"router_scalar_n{n}_b{b},{us_s:.2f},"
+                f"req_per_s={b / t_scalar:.0f}"
+            )
+            print(
+                f"router_batched_n{n}_b{b},{us_b:.2f},"
+                f"req_per_s={b / t_batch:.0f};speedup={t_scalar / t_batch:.1f}x"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -89,6 +89,16 @@ def bench_kernels():
     print(f"rmsnorm_4096x2048,{us:.1f},gb_per_s={gb * 1e6 / us:.1f}")
 
 
+def bench_router():
+    """Fleet-scale request routing: scalar oracle vs jitted batched scan."""
+    from benchmarks import router_throughput
+
+    # one representative cell per size regime; the full sweep is
+    # ``python -m benchmarks.router_throughput``
+    router_throughput.main(fleet_sizes=(16, 64), batch_sizes=(1024,),
+                           header=False)
+
+
 def bench_train_step():
     from repro.configs import get_arch, reduced
     from repro.data import pipeline
@@ -153,6 +163,7 @@ def main() -> None:
     bench_env_step()
     bench_maddpg_update()
     bench_kernels()
+    bench_router()
     bench_train_step()
     paper_tables()
     faithful_table()

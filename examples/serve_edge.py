@@ -1,7 +1,9 @@
-"""Model-aware edge serving demo: the paper's offloading policy routes
-batched generation requests across a 3-server edge fleet caching real
-architectures from the assigned pool, then each routed request actually
-prefimms+decodes through the model zoo on the local device.
+"""Model-aware edge serving demo: the paper's offloading policy routes a
+whole batch of generation requests across a 3-server edge fleet caching
+real architectures from the assigned pool — one jitted
+``core.batch_router`` call with sequential-commit semantics — then each
+routed request actually prefills+decodes through the model zoo on the
+local device.
 
     PYTHONPATH=src python examples/serve_edge.py
 """

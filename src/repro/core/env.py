@@ -81,6 +81,27 @@ def default_params(
     )
 
 
+def lru_keep(cache_row, last_row, slots: int):
+    """Keep the ``slots`` most-recently-used cached models of one server.
+
+    ``cache_row``: (K,) 0/1 residency; ``last_row``: (K,) last-use clocks.
+    Shared by ``step`` and the batched router's eviction tests."""
+    order = jnp.argsort(
+        jnp.where(cache_row > 0.5, -last_row.astype(jnp.float32), jnp.inf)
+    )
+    keep_mask = jnp.zeros_like(cache_row).at[order[:slots]].set(1.0)
+    return cache_row * keep_mask
+
+
+def fifo_load(es_idx, offloaded, num_ess: int):
+    """Per-agent FIFO-fair contention divisor (eqs. 6/9).
+
+    Counts how many agents offload to each ES and returns, for every agent,
+    the head-count at its chosen ES (>= 1 so non-offloaders divide by 1)."""
+    load = jnp.zeros((num_ess,)).at[es_idx].add(offloaded.astype(jnp.float32))
+    return jnp.maximum(load[es_idx], 1.0)
+
+
 def _sample_tasks(key, p: EnvParams) -> Task:
     k1, k2, k3 = jax.random.split(key, 3)
     mu = jax.random.randint(k1, (p.num_eds,), 0, p.num_models)
@@ -169,8 +190,7 @@ def step(state: EnvState, act: Action, p: EnvParams):
     es_idx = jnp.clip(act.target - 1, 0, n - 1)  # valid only where offloaded
 
     # --- contention: uplink bandwidth + ES cycles are shared FIFO-fairly ----
-    load = jnp.zeros((n,)).at[es_idx].add(offloaded.astype(jnp.float32))
-    load_m = jnp.maximum(load[es_idx], 1.0)  # per-agent load at chosen ES
+    load_m = fifo_load(es_idx, offloaded, n)  # per-agent load at chosen ES
 
     dist = jnp.linalg.norm(state.ed_pos - state.es_pos[es_idx], axis=-1)
     gain = costs.channel_gain(dist, p.pathloss_ref, p.pathloss_exp)
@@ -250,14 +270,9 @@ def step(state: EnvState, act: Action, p: EnvParams):
     cache = jnp.maximum(state.cache, added)
 
     # evict LRU entries beyond capacity (vectorised top-k keep per ES)
-    def evict(cache_row, last_row):
-        order = jnp.argsort(
-            jnp.where(cache_row > 0.5, -last_row.astype(jnp.float32), jnp.inf)
-        )
-        keep_mask = jnp.zeros_like(cache_row).at[order[: p.cache_slots]].set(1.0)
-        return cache_row * keep_mask
-
-    cache = jax.vmap(evict)(cache, new_last_use)
+    cache = jax.vmap(lambda c, l: lru_keep(c, l, p.cache_slots))(
+        cache, new_last_use
+    )
 
     k_task, k_next = jax.random.split(state.key)
     t_next = state.t + 1

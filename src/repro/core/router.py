@@ -1,9 +1,9 @@
-"""ModelAwareRouter — the paper's technique as a first-class serving feature.
+"""ModelAwareRouter — the scalar REFERENCE ORACLE for request routing.
 
 A fleet of edge servers (device groups in a real deployment) each caches
-``cache_slots`` generative models. Batched generation requests arrive
-tagged with a model index; the router assigns each request to a server,
-pricing exactly the paper's cost terms per candidate:
+``cache_slots`` generative models. Generation requests arrive tagged
+with a model index; the router assigns each request to a server, pricing
+exactly the paper's cost terms per candidate:
 
     transmission (eq. 5)  +  model switch if not resident (eq. 7)
     +  compute at the server's share of capacity (eq. 9, FIFO-fair)
@@ -15,8 +15,14 @@ Two policies share the scoring code:
     (requests act as agents over the same observation layout as the env).
 
 The router maintains LRU residency exactly like the environment, so a
-policy trained in `core.env` transfers unchanged — `examples/serve_edge.py`
-demonstrates end-to-end routing of decode batches through the model zoo.
+policy trained in `core.env` transfers unchanged.
+
+This implementation routes ONE request per call through readable Python
+dataclass mutation. It is deliberately kept that way: it is the ground
+truth that ``core.batch_router`` — the jitted, fleet-scale batched path
+used by ``launch/serve.py`` — must match request for request
+(tests/test_batch_router.py pins choices, latencies, residency and LRU
+evictions against it). Serving code should use ``core.batch_router``.
 """
 from __future__ import annotations
 

@@ -76,10 +76,10 @@ def shrink_mesh(failed_hosts: set[int], hosts_per_pod: int, model: int,
     if usable == 0:
         raise RuntimeError("not enough surviving devices for one model group")
     data = usable // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"), devices=surviving[:usable],
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.distributed import sharding
+
+    return sharding.make_mesh((data, model), ("data", "model"),
+                              devices=surviving[:usable])
 
 
 def reshard_checkpoint_tree(tree, specs, new_mesh):

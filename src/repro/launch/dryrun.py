@@ -143,7 +143,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, overrides=None,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = hlo_analysis.xla_cost_analysis(compiled)
             hlo = hlo_analysis.analyze(compiled.as_text())
             rec.update(
                 status="ok",

@@ -231,3 +231,12 @@ class HloModule:
 
 def analyze(compiled_text: str) -> dict:
     return HloModule(compiled_text).entry_cost()
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Version-compat view of ``compiled.cost_analysis()``: newer JAX returns
+    one dict, older JAX a one-entry-per-device list of dicts."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return ca

@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.distributed import sharding
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -27,18 +29,11 @@ def make_production_mesh(*, multi_pod: bool = False):
             "launch with XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "for the dry-run"
         )
-    return jax.make_mesh(
-        shape, axes,
-        devices=devices[:ndev],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return sharding.make_mesh(shape, axes, devices=devices[:ndev])
 
 
 def make_host_mesh(model: int = 1):
     """Tiny mesh over however many local devices exist (tests/examples)."""
     n = len(jax.devices())
     data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
-    )
+    return sharding.make_mesh((data, model), ("data", "model"))

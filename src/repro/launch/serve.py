@@ -3,9 +3,9 @@
 Wires the paper's scheduling layer to the real model plane:
   * a fleet of ``EdgeServer``s (device groups), each caching a subset of
     the catalogue (the 10 assigned architectures);
-  * batched generation requests routed by ``ModelAwareRouter`` pricing
-    the paper's eq. 5/7/9 cost terms (transmission, model switch,
-    FIFO-shared compute);
+  * the WHOLE request batch routed in one jitted ``core.batch_router``
+    call pricing the paper's eq. 5/7/9 cost terms (transmission, model
+    switch, FIFO-shared compute) with sequential-commit semantics;
   * actual prefill+decode of the routed batch through ``models.lm`` on
     the local device (reduced configs on CPU).
 
@@ -21,8 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, list_archs, reduced
+from repro.core import batch_router
 from repro.core.catalog import build_catalog
-from repro.core.router import EdgeServer, ModelAwareRouter, Request
+from repro.core.router import EdgeServer
 from repro.models import lm
 
 
@@ -43,29 +44,36 @@ def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
     # serve the edge-suitable (small) members of the catalogue
     edge_archs = ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
     catalog = build_catalog(edge_archs)
-    router = ModelAwareRouter(make_fleet(n_servers, catalog), catalog,
-                              policy=policy)
+    fleet_params, fleet_state = batch_router.fleet_from_servers(
+        make_fleet(n_servers, catalog), catalog
+    )
 
     # local reduced models actually generate tokens for routed requests
-    models, caches = {}, {}
+    models = {}
     if execute:
         for e in catalog:
             cfg = reduced(get_arch(e.name))
             models[e.index] = (cfg, lm.init_params(jax.random.key(e.index), cfg))
 
-    decisions, latencies = [], []
+    reqs = batch_router.RequestBatch(
+        model=jnp.asarray(rng.integers(0, len(catalog), num_requests), jnp.int32),
+        prompt_bits=jnp.asarray(rng.uniform(1e5, 1e6, num_requests), jnp.float32),
+        gen_tokens=jnp.full((num_requests,), gen_tokens, jnp.float32),
+    )
+
+    # route the WHOLE batch in one jitted call (sequential-commit scan);
+    # each routed request drains the fleet like the old per-request loop
     t0 = time.time()
-    for i in range(num_requests):
-        req = Request(
-            model=int(rng.integers(0, len(catalog))),
-            prompt_bits=float(rng.uniform(1e5, 1e6)),
-            gen_tokens=gen_tokens,
-        )
-        choice, pred_lat = router.route(req)
-        decisions.append((req, choice))
-        latencies.append((choice, pred_lat))
-        if execute:
-            cfg, params = models[req.model]
+    fleet_state, out = batch_router.route_batch(
+        fleet_params, fleet_state, reqs,
+        gen_tokens * n_servers / max(num_requests, 1), policy=policy,
+    )
+    jax.block_until_ready(out.choice)
+    route_s = time.time() - t0
+
+    if execute:
+        for model_idx in np.asarray(reqs.model):
+            cfg, params = models[int(model_idx)]
             B, P = 1, 8
             if cfg.modality == "audio":
                 prompt = jnp.zeros((B, P, cfg.num_codebooks), jnp.int32)
@@ -82,14 +90,14 @@ def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
                 return jnp.pad(src, pad).astype(dst.dtype)
 
             cache = jax.tree.map(seat, full, cache)
-            tok = ids[:, -1:] if cfg.modality != "audio" else ids[:, -1:]
+            tok = ids[:, -1:]
             for t in range(gen_tokens):
                 tok, _, cache = lm.decode_step(
                     params, cache, tok, jnp.int32(P + t), cfg
                 )
-        router.drain(gen_tokens * n_servers / max(num_requests, 1))
 
-    stats = router.stats([r for r, _ in decisions], latencies)
+    stats = batch_router.stats(out)
+    stats["route_s"] = route_s
     stats["wall_s"] = time.time() - t0
     stats["requests"] = num_requests
     return stats
@@ -99,7 +107,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--servers", type=int, default=3)
-    ap.add_argument("--policy", default="greedy", choices=["greedy"])
+    ap.add_argument("--policy", default="greedy", choices=["greedy", "load"])
     ap.add_argument("--no-execute", action="store_true",
                     help="route only (no local generation)")
     args = ap.parse_args()

@@ -1,0 +1,270 @@
+"""Batched router vs the scalar ModelAwareRouter oracle — exact equivalence.
+
+The batched ``lax.scan`` path must reproduce the scalar reference request
+for request: same choices, same predicted latencies, same residency sets,
+same LRU evictions, same queues — over randomised request streams, fleet
+shapes and cache sizes. Integer decisions are compared exactly; latencies
+under x64 to within a couple of ulps (XLA emits FMAs the Python oracle
+cannot). The float32 fast path must still agree on every integer decision.
+"""
+import copy
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core import batch_router as br
+from repro.core.catalog import build_catalog
+from repro.core.router import EdgeServer, ModelAwareRouter, Request
+
+CATALOG = build_catalog(
+    ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
+)
+
+
+def _random_fleet(rng, n_servers, cache_slots):
+    return [
+        EdgeServer(
+            name=f"es{i}",
+            flops_per_s=float(rng.uniform(5e13, 2e14)),
+            cache_slots=cache_slots,
+            uplink_bps=float(rng.uniform(5e7, 2e8)),
+            backhaul_bps=float(rng.uniform(5e8, 2e9)),
+            resident=list(
+                rng.choice(len(CATALOG), size=cache_slots, replace=False)
+            ),
+        )
+        for i in range(n_servers)
+    ]
+
+
+def _random_stream(rng, n_requests):
+    return (
+        rng.integers(0, len(CATALOG), n_requests),
+        rng.uniform(1e5, 1e6, n_requests),
+        rng.integers(1, 64, n_requests),
+    )
+
+
+def _run_scalar(servers, models, bits, toks, drain, policy="greedy",
+                actor=None):
+    router = ModelAwareRouter(copy.deepcopy(servers), CATALOG,
+                              policy=policy, actor=actor)
+    choices, lats, hits = [], [], []
+    for m, b, t in zip(models, bits, toks):
+        srv_resident = [int(m) in s.resident for s in router.servers]
+        c, l = router.route(Request(int(m), float(b), int(t)))
+        choices.append(c)
+        lats.append(l)
+        hits.append(srv_resident[c])
+        router.drain(drain)
+    return router, np.array(choices), np.array(lats), np.array(hits)
+
+
+def _run_batched(servers, models, bits, toks, drain, dtype, policy="greedy",
+                 actor=None):
+    params, state = br.fleet_from_servers(servers, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, dtype),
+        gen_tokens=jnp.asarray(toks, dtype),
+    )
+    return br.route_batch(params, state, reqs, drain, policy=policy,
+                          actor=actor)
+
+
+def _assert_fleet_state_matches(router, state):
+    resident = np.asarray(state.resident)
+    last_use = np.asarray(state.last_use)
+    for i, srv in enumerate(router.servers):
+        assert set(np.nonzero(resident[i])[0]) == set(srv.resident), i
+        for m in srv.resident:
+            if m in srv.last_use:  # touched models carry the exact clock
+                assert last_use[i, m] == srv.last_use[m], (i, m)
+    np.testing.assert_allclose(
+        np.asarray(state.queue_tokens),
+        np.array([s.queue_tokens for s in router.servers]),
+        rtol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("seed,n_servers,cache_slots", [
+    (0, 2, 1), (1, 3, 2), (2, 5, 2), (3, 8, 3), (4, 4, 1), (5, 6, 4),
+])
+def test_batched_matches_scalar_oracle_exactly(seed, n_servers, cache_slots):
+    """x64: choices, latencies, residency, LRU clocks and queues all equal."""
+    with enable_x64():
+        rng = np.random.default_rng(seed)
+        servers = _random_fleet(rng, n_servers, cache_slots)
+        models, bits, toks = _random_stream(rng, 300)
+        drain = float(rng.uniform(0.0, 50.0))
+
+        router, sc_choice, sc_lat, sc_hit = _run_scalar(
+            servers, models, bits, toks, drain
+        )
+        state, out = _run_batched(
+            servers, models, bits, toks, drain, jnp.float64
+        )
+
+        np.testing.assert_array_equal(np.asarray(out.choice), sc_choice)
+        # XLA fuses mul+add into an FMA the Python oracle can't express;
+        # latencies agree to the last couple of ulps, decisions exactly.
+        np.testing.assert_allclose(np.asarray(out.latency), sc_lat,
+                                   rtol=1e-12, atol=0.0)
+        np.testing.assert_array_equal(np.asarray(out.hit), sc_hit)
+        _assert_fleet_state_matches(router, state)
+
+
+@pytest.mark.parametrize("seed", [10, 11, 12])
+def test_float32_fast_path_same_decisions(seed):
+    """The f32 serving path must agree on every choice/eviction (decisions
+    are integer-valued; f32 rounding never flips a non-degenerate argmin)."""
+    rng = np.random.default_rng(seed)
+    servers = _random_fleet(rng, 4, 2)
+    models, bits, toks = _random_stream(rng, 400)
+
+    router, sc_choice, _, sc_hit = _run_scalar(servers, models, bits, toks, 5.0)
+    state, out = _run_batched(servers, models, bits, toks, 5.0, jnp.float32)
+
+    np.testing.assert_array_equal(np.asarray(out.choice), sc_choice)
+    np.testing.assert_array_equal(np.asarray(out.hit), sc_hit)
+    resident = np.asarray(state.resident)
+    for i, srv in enumerate(router.servers):
+        assert set(np.nonzero(resident[i])[0]) == set(srv.resident), i
+
+
+def test_actor_policy_matches_scalar_actor():
+    """A (traceable) actor drives both routers to identical streams."""
+
+    def actor(obs, lats):
+        # busiest-server actor: pathological but deterministic in both paths
+        queue = jnp.reshape(jnp.asarray(obs), (-1, 3))[:, 1]
+        return jnp.argmax(queue)
+
+    rng = np.random.default_rng(7)
+    servers = _random_fleet(rng, 5, 2)
+    models, bits, toks = _random_stream(rng, 120)
+
+    router, sc_choice, _, _ = _run_scalar(
+        servers, models, bits, toks, 0.0, policy="actor", actor=actor
+    )
+    state, out = _run_batched(
+        servers, models, bits, toks, 0.0, jnp.float32, policy="actor",
+        actor=actor,
+    )
+    np.testing.assert_array_equal(np.asarray(out.choice), sc_choice)
+    _assert_fleet_state_matches(router, state)
+
+
+def test_load_policy_balances_queues():
+    rng = np.random.default_rng(8)
+    servers = _random_fleet(rng, 4, 2)
+    models, bits, toks = _random_stream(rng, 200)
+    state, out = _run_batched(
+        servers, models, bits, toks, 0.0, jnp.float32, policy="load"
+    )
+    counts = np.bincount(np.asarray(out.choice), minlength=4)
+    # least-loaded dispatch spreads work across every server
+    assert counts.min() > 0
+    queues = np.asarray(state.queue_tokens)
+    assert queues.max() < 2.0 * queues.min() + float(np.max(toks))
+
+
+def test_score_matrix_matches_candidate_latency():
+    """One-shot (B, N) scoring == the oracle's per-candidate pricing."""
+    with enable_x64():
+        rng = np.random.default_rng(9)
+        servers = _random_fleet(rng, 6, 2)
+        models, bits, toks = _random_stream(rng, 50)
+        router = ModelAwareRouter(copy.deepcopy(servers), CATALOG)
+        expected = np.array([
+            [router._candidate_latency(s, Request(int(m), float(b), int(t)))
+             for s in router.servers]
+            for m, b, t in zip(models, bits, toks)
+        ])
+        params, state = br.fleet_from_servers(servers, CATALOG)
+        reqs = br.RequestBatch(
+            model=jnp.asarray(models, jnp.int32),
+            prompt_bits=jnp.asarray(bits, jnp.float64),
+            gen_tokens=jnp.asarray(toks, jnp.float64),
+        )
+        got = np.asarray(br.score_matrix(params, state, reqs))
+        np.testing.assert_allclose(got, expected, rtol=1e-12, atol=0.0)
+
+
+def test_per_request_drain_vector():
+    """A (B,) drain schedule matches per-request scalar drains."""
+    with enable_x64():
+        rng = np.random.default_rng(13)
+        servers = _random_fleet(rng, 3, 2)
+        models, bits, toks = _random_stream(rng, 80)
+        drains = rng.uniform(0.0, 30.0, 80)
+
+        router = ModelAwareRouter(copy.deepcopy(servers), CATALOG)
+        sc_choice = []
+        for m, b, t, d in zip(models, bits, toks, drains):
+            c, _ = router.route(Request(int(m), float(b), int(t)))
+            sc_choice.append(c)
+            router.drain(float(d))
+
+        params, state = br.fleet_from_servers(servers, CATALOG)
+        reqs = br.RequestBatch(
+            model=jnp.asarray(models, jnp.int32),
+            prompt_bits=jnp.asarray(bits, jnp.float64),
+            gen_tokens=jnp.asarray(toks, jnp.float64),
+        )
+        state, out = br.route_batch(params, state, reqs, jnp.asarray(drains))
+        np.testing.assert_array_equal(np.asarray(out.choice),
+                                      np.array(sc_choice))
+        _assert_fleet_state_matches(router, state)
+
+
+def test_midstream_snapshot_continues_oracle():
+    """Snapshotting a scalar router mid-stream (warm last_use clocks) and
+    continuing batched must keep matching — requires threading the oracle's
+    clock, or the new batch's clocks would sort BELOW existing residents'."""
+    with enable_x64():
+        rng = np.random.default_rng(21)
+        servers = _random_fleet(rng, 4, 2)
+        models, bits, toks = _random_stream(rng, 240)
+
+        router = ModelAwareRouter(copy.deepcopy(servers), CATALOG)
+        sc_choice = []
+        for m, b, t in zip(models, bits, toks):
+            c, _ = router.route(Request(int(m), float(b), int(t)))
+            sc_choice.append(c)
+
+        half = 120
+        warm = ModelAwareRouter(copy.deepcopy(servers), CATALOG)
+        for m, b, t in zip(models[:half], bits[:half], toks[:half]):
+            warm.route(Request(int(m), float(b), int(t)))
+        params, state = br.fleet_from_servers(warm.servers, CATALOG,
+                                              clock=warm.clock)
+        reqs = br.RequestBatch(
+            model=jnp.asarray(models[half:], jnp.int32),
+            prompt_bits=jnp.asarray(bits[half:], jnp.float64),
+            gen_tokens=jnp.asarray(toks[half:], jnp.float64),
+        )
+        state, out = br.route_batch(params, state, reqs)
+        np.testing.assert_array_equal(np.asarray(out.choice),
+                                      np.array(sc_choice[half:]))
+        _assert_fleet_state_matches(router, state)
+
+
+@pytest.mark.slow
+def test_fleet_scale_single_call():
+    """Acceptance shape: B=4096 requests over N=64 servers, one jitted call,
+    still bit-identical to the scalar oracle on choices and residency."""
+    rng = np.random.default_rng(42)
+    servers = _random_fleet(rng, 64, 2)
+    models, bits, toks = _random_stream(rng, 4096)
+
+    router, sc_choice, _, _ = _run_scalar(servers, models, bits, toks, 0.0)
+    state, out = _run_batched(servers, models, bits, toks, 0.0, jnp.float32)
+
+    np.testing.assert_array_equal(np.asarray(out.choice), sc_choice)
+    resident = np.asarray(state.resident)
+    for i, srv in enumerate(router.servers):
+        assert set(np.nonzero(resident[i])[0]) == set(srv.resident), i

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed import compression, fault_tolerance as ft
+from repro.distributed import compression, fault_tolerance as ft, sharding
 
 
 def test_straggler_detection():
@@ -51,12 +51,11 @@ def test_compression_handles_outliers_per_block():
 
 
 def test_compressed_psum_single_group_is_identity():
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = sharding.make_mesh((1,), ("pod",))
     x = jax.random.normal(jax.random.key(3), (300,))
 
     def f(v):
-        return jax.shard_map(
+        return sharding.shard_map(
             lambda a: compression.compressed_psum(a, "pod"), mesh=mesh,
             in_specs=jax.sharding.PartitionSpec(),
             out_specs=jax.sharding.PartitionSpec(),

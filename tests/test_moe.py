@@ -50,8 +50,9 @@ def test_shard_map_path_matches_local():
     params = moe.moe_init(jax.random.key(0), cfg)
     x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
     y_local, aux_local = moe.moe_apply_local(params, x, cfg)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed import sharding
+
+    mesh = sharding.make_mesh((1, 1), ("data", "model"))
     y_sm, aux_sm = jax.jit(lambda p, xx: moe.moe_apply(p, xx, cfg, mesh=mesh))(
         params, x
     )

@@ -53,8 +53,9 @@ def test_ep_moe_matches_local_reference():
     x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
     y_ref, _ = moe.moe_apply_local(params, x, cfg, impl="scan",
                                    capacity_factor=4.0)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed import sharding
+
+    mesh = sharding.make_mesh((1, 1), ("data", "model"))
     y_ep, _ = jax.jit(lambda p, xx: moe.moe_apply(p, xx, cfg, mesh=mesh))(
         params, x
     )

@@ -2,12 +2,14 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import env as env_lib, evaluate, maddpg
 from repro.core.catalog import build_catalog
 from repro.core.router import EdgeServer, ModelAwareRouter, Request
 
 
+@pytest.mark.slow
 def test_maddpg_training_beats_random():
     """A short MADDPG-MATO run must outperform the random policy."""
     p = env_lib.default_params(num_eds=6, num_models=3)
@@ -24,6 +26,7 @@ def test_maddpg_training_beats_random():
     assert trained["completion"] >= rand["completion"]
 
 
+@pytest.mark.slow
 def test_reward_improves_during_training():
     p = env_lib.default_params(num_eds=6, num_models=3)
     cfg = maddpg.AlgoConfig(
