@@ -1,0 +1,109 @@
+"""Multi-cell fleet routing throughput: C cells x N servers x B requests
+in ONE jitted ``core.batch_router.route_batch`` call.
+
+Sweeps cell counts C in {1, 2, 4}, per-cell fleet sizes and batch sizes,
+with every fleet carrying the block-diagonal cell mask, a fleet-wide
+cloud-fallback column and a time-based drain (tokens/sec folded into the
+scan carry, queue decay tracking Poisson arrival stamps). Small cells are
+verified request-for-request against the scalar ``ModelAwareRouter``
+oracle before timing; large cells are timed only.
+
+    PYTHONPATH=src python -m benchmarks.multicell_throughput
+
+CSV convention: ``name,us_per_call,derived`` (us per ROUTED REQUEST).
+"""
+from __future__ import annotations
+
+import copy
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch_router as br
+from repro.core.catalog import build_catalog
+from repro.core.router import ModelAwareRouter, Request
+from repro.launch.serve import make_multicell_fleet
+
+CELL_COUNTS = (1, 2, 4)
+SERVERS_PER_CELL = (16,)
+BATCH_SIZES = (1024, 4096)
+DRAIN_RATE = 50.0        # tokens/sec per server
+ARRIVAL_RATE = 2000.0    # fleet-wide requests/sec
+VERIFY_MAX = 512         # oracle-check cells up to this batch size
+EDGE_ARCHS = ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
+
+
+def make_stream(rng, n_requests, num_models, n_cells):
+    return br.RequestBatch(
+        model=jnp.asarray(rng.integers(0, num_models, n_requests), jnp.int32),
+        prompt_bits=jnp.asarray(rng.uniform(1e5, 1e6, n_requests), jnp.float32),
+        gen_tokens=jnp.asarray(rng.integers(1, 32, n_requests), jnp.float32),
+        cell=jnp.asarray(rng.integers(0, n_cells, n_requests), jnp.int32),
+        arrival_s=jnp.asarray(
+            np.cumsum(rng.exponential(1.0 / ARRIVAL_RATE, n_requests)),
+            jnp.float32,
+        ),
+    )
+
+
+def verify_against_oracle(fleet, catalog, reqs):
+    """Per-cell scalar oracle must agree on every routing choice."""
+    router = ModelAwareRouter(copy.deepcopy(fleet), catalog)
+    expected = [
+        router.route(Request(int(m), float(b), int(t), cell=int(c),
+                             arrival_s=float(a)))[0]
+        for m, b, t, c, a in zip(
+            np.asarray(reqs.model), np.asarray(reqs.prompt_bits),
+            np.asarray(reqs.gen_tokens), np.asarray(reqs.cell),
+            np.asarray(reqs.arrival_s),
+        )
+    ]
+    params, state = br.fleet_from_servers(fleet, catalog)
+    _, out = br.route_batch(params, state, reqs)
+    assert np.array_equal(np.asarray(out.choice), np.array(expected)), (
+        "multi-cell batched router diverged from the scalar oracle"
+    )
+
+
+def time_cell(n_cells, servers_per_cell, n_requests, seed=0, repeats=3):
+    catalog = build_catalog(EDGE_ARCHS)
+    rng = np.random.default_rng(seed)
+    fleet = make_multicell_fleet(n_cells, servers_per_cell, catalog,
+                                 drain_rate=DRAIN_RATE)
+    reqs = make_stream(rng, n_requests, len(catalog), n_cells)
+    if n_requests <= VERIFY_MAX:
+        verify_against_oracle(fleet, catalog, reqs)
+
+    params, state = br.fleet_from_servers(fleet, catalog)
+    _, out = br.route_batch(params, state, reqs)  # compile
+    jax.block_until_ready(out.choice)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _, out = br.route_batch(params, state, reqs)
+        jax.block_until_ready(out.choice)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(cell_counts=CELL_COUNTS, servers_per_cell=SERVERS_PER_CELL,
+         batch_sizes=BATCH_SIZES, header=True):
+    if header:  # run.py already printed the combined-stream header
+        print("name,us_per_call,derived")
+    # oracle anchor: one small verified cell per C before the timed sweep
+    for c in cell_counts:
+        time_cell(c, 4, 256)
+    for c in cell_counts:
+        for n in servers_per_cell:
+            for b in batch_sizes:
+                t = time_cell(c, n, b)
+                print(
+                    f"router_multicell_c{c}_n{c * n}_b{b},{t / b * 1e6:.2f},"
+                    f"req_per_s={b / t:.0f}"
+                )
+
+
+if __name__ == "__main__":
+    main()

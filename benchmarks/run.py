@@ -99,6 +99,16 @@ def bench_router():
                            header=False)
 
 
+def bench_multicell():
+    """Multi-cell fleets + time-based drain, one jitted call per batch."""
+    from benchmarks import multicell_throughput
+
+    # the acceptance cell (C=4, N=64, B=1024); the full sweep is
+    # ``python -m benchmarks.multicell_throughput``
+    multicell_throughput.main(cell_counts=(4,), servers_per_cell=(16,),
+                              batch_sizes=(1024,), header=False)
+
+
 def bench_train_step():
     from repro.configs import get_arch, reduced
     from repro.data import pipeline
@@ -164,6 +174,7 @@ def main() -> None:
     bench_maddpg_update()
     bench_kernels()
     bench_router()
+    bench_multicell()
     bench_train_step()
     paper_tables()
     faithful_table()

@@ -3,7 +3,8 @@ whole batch of generation requests across a 3-server edge fleet caching
 real architectures from the assigned pool — one jitted
 ``core.batch_router`` call with sequential-commit semantics — then each
 routed request actually prefills+decodes through the model zoo on the
-local device.
+local device. A second pass scales the same call to a 4-cell fleet with
+a cloud-fallback column and a wall-clock (time-based) queue drain.
 
     PYTHONPATH=src python examples/serve_edge.py
 """
@@ -23,6 +24,16 @@ def main():
     # model-aware routing should keep most requests on resident models
     assert stats["residency_hit_rate"] > 0.5
     print("OK: model-aware router keeps requests on cached models")
+
+    print("\nrouting 96 requests across a 4-cell fleet (3 servers/cell + "
+          "cloud fallback, 50 tok/s time-based drain)...")
+    stats = serve(num_requests=96, n_servers=3, execute=False, n_cells=4,
+                  drain_rate=50.0, arrival_rate=200.0)
+    for k, v in stats.items():
+        print(f"  {k}: {v}")
+    assert stats["residency_hit_rate"] > 0.5
+    assert stats["cloud_fallback_rate"] < 0.5  # cells absorb most traffic
+    print("OK: one jitted call routes the whole multi-cell fleet")
 
 
 if __name__ == "__main__":

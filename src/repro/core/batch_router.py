@@ -29,19 +29,44 @@ Design
   layout the scalar router exposes), ``load`` (least-loaded server,
   switch-blind — a fleet-level baseline).
 
-Follow-ons tracked in ROADMAP: async drain between scan steps,
-multi-cell fleets (block-diagonal score matrices), and a Pallas scoring
-kernel once N x K residency rows stop fitting VMEM-friendly tiles.
+Multi-cell fleets
+-----------------
+Servers carry a ``cell`` id (``FleetParams.cell``) and requests a
+``RequestBatch.cell``; the score matrix is masked block-diagonally so a
+request only sees the servers of its own cell, plus every server in the
+reserved ``CLOUD_CELL`` (-1) — the cloud-fallback column, visible
+fleet-wide and priced through the backhaul (its effective uplink folds
+the extra hop; see ``launch.serve.make_cloud_server``). One jitted
+``route_batch`` call therefore routes an entire multi-cell fleet:
+C cells x N servers x B requests, no per-cell Python loop. When
+``RequestBatch.cell`` is ``None`` (the default) the mask is compiled
+out entirely and the fleet behaves as one cell.
+
+Time-based drain
+----------------
+Servers complete queued work continuously at ``FleetParams.drain_rate``
+tokens/sec. Requests carry a wall-clock ``RequestBatch.arrival_s``; the
+scan carry holds the fleet clock ``FleetState.time_s``, and before each
+request is scored every queue decays by ``drain_rate * dt`` with ``dt``
+the time elapsed since the carry clock last advanced. Queue decay thus
+tracks wall clock rather than request count. ``drain_rate == 0`` (or
+``arrival_s=None``) reproduces the synchronous behaviour exactly; the
+legacy per-request ``drain_tokens`` argument is still honoured.
+
+Follow-ons tracked in ROADMAP: a Pallas scoring kernel once N x K
+residency rows stop fitting VMEM-friendly tiles, and trained-actor
+serving through ``launch/serve.py``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import costs
+from repro.core.router import CLOUD_CELL
 
 _NEVER_USED = -(2**30)  # last-use clock for models that are not resident
 
@@ -55,6 +80,8 @@ class FleetParams(NamedTuple):
     cache_slots: jnp.ndarray          # (N,) int32
     size_bits: jnp.ndarray            # (K,) model weights over the backhaul
     decode_flops_per_token: jnp.ndarray  # (K,)
+    cell: Optional[jnp.ndarray] = None        # (N,) int32 cell id; CLOUD_CELL
+    drain_rate: Optional[jnp.ndarray] = None  # (N,) tokens/sec drained
 
 
 class FleetState(NamedTuple):
@@ -64,18 +91,26 @@ class FleetState(NamedTuple):
     last_use: jnp.ndarray    # (N, K) int32 LRU clocks
     queue_tokens: jnp.ndarray  # (N,) outstanding decode work, FIFO
     clock: jnp.ndarray       # () int32, increments per routed request
+    time_s: Optional[jnp.ndarray] = None  # () wall clock for the time drain
 
 
 class RequestBatch(NamedTuple):
-    """A batch of tagged generation requests (struct-of-arrays)."""
+    """A batch of tagged generation requests (struct-of-arrays).
+
+    ``cell``/``arrival_s`` are optional topology/timing columns: ``None``
+    (the default) statically compiles the cell mask / time drain out of
+    the scan, preserving the single-cell synchronous fast path.
+    """
 
     model: jnp.ndarray        # (B,) int32 catalogue index
     prompt_bits: jnp.ndarray  # (B,)
     gen_tokens: jnp.ndarray   # (B,)
+    cell: Optional[jnp.ndarray] = None       # (B,) int32 requesting cell
+    arrival_s: Optional[jnp.ndarray] = None  # (B,) wall-clock arrivals
 
 
 class RouteOutcome(NamedTuple):
-    choice: jnp.ndarray     # (B,) int32 chosen server
+    choice: jnp.ndarray     # (B,) int32 chosen server; -1 == rejected
     latency: jnp.ndarray    # (B,) predicted eq. 11 latency at choice
     hit: jnp.ndarray        # (B,) bool — model resident at decision time
 
@@ -99,10 +134,17 @@ def make_fleet_params(servers, catalog) -> FleetParams:
         decode_flops_per_token=jnp.asarray(
             np.array([e.decode_flops_per_token for e in entries])
         ),
+        cell=jnp.asarray(
+            np.array([getattr(s, "cell", 0) for s in servers], np.int32)
+        ),
+        drain_rate=jnp.asarray(
+            np.array([getattr(s, "drain_rate", 0.0) for s in servers])
+        ),
     )
 
 
-def make_fleet_state(servers, num_models: int, clock: int = 0) -> FleetState:
+def make_fleet_state(servers, num_models: int, clock: int = 0,
+                     time_s: float = 0.0) -> FleetState:
     """Array state mirroring the scalar servers' residency/queues.
 
     The scalar oracle breaks LRU ties (several never-used residents, all
@@ -126,19 +168,22 @@ def make_fleet_state(servers, num_models: int, clock: int = 0) -> FleetState:
         last_use=jnp.asarray(last_use),
         queue_tokens=jnp.asarray(queue),
         clock=jnp.asarray(clock, jnp.int32),
+        time_s=jnp.asarray(time_s, jnp.asarray(queue).dtype),
     )
 
 
-def fleet_from_servers(servers, catalog, clock: int = 0):
+def fleet_from_servers(servers, catalog, clock: int = 0, time_s: float = 0.0):
     """(FleetParams, FleetState) snapshot of a scalar router's fleet.
 
     ``clock`` must be the scalar router's current clock when snapshotting
     mid-stream (its ``last_use`` values are in [1, clock]; starting the
     batched clock below them would invert LRU order). Fresh fleets use 0.
+    ``time_s`` likewise carries the oracle's wall clock (``router.time_s``)
+    so the time-based drain resumes from the same instant.
     """
     return (
         make_fleet_params(servers, catalog),
-        make_fleet_state(servers, len(catalog), clock=clock),
+        make_fleet_state(servers, len(catalog), clock=clock, time_s=time_s),
     )
 
 
@@ -159,14 +204,30 @@ def _static_costs(params: FleetParams, reqs: RequestBatch):
     return t_trans, switch_price, flops_tok
 
 
+def cell_mask(params: FleetParams, reqs: RequestBatch):
+    """(B, N) block-diagonal visibility mask, or ``None`` when untopologied.
+
+    True where the server is in the request's cell OR in the reserved
+    ``CLOUD_CELL`` (the fleet-wide cloud-fallback column). ``None`` —
+    returned when either side carries no cell ids — means "everything
+    visible" and lets callers compile the mask away statically."""
+    if params.cell is None or reqs.cell is None:
+        return None
+    return (params.cell[None, :] == reqs.cell[:, None]) | (
+        params.cell[None, :] == CLOUD_CELL
+    )
+
+
 def score_matrix(params: FleetParams, state: FleetState, reqs: RequestBatch):
     """Full (B, N) eq. 11 cost matrix against the CURRENT fleet state.
 
     One shot over all request x server pairs: eq. 5 transmission +
     eq. 7 switch (gated on residency) + eq. 9 compute against the
-    present queue backlog. ``route_batch`` shares the state-independent
-    pieces (``_static_costs``) and re-derives the state-dependent ones
-    step by step; this entry point is the one-shot view (policy studies,
+    present queue backlog. Out-of-cell pairs score ``+inf`` when the
+    batch carries cell ids (block-diagonal mask + cloud column).
+    ``route_batch`` shares the state-independent pieces
+    (``_static_costs``) and re-derives the state-dependent ones step by
+    step; this entry point is the one-shot view (policy studies,
     admission control, and the planned Pallas kernel target exactly this
     contraction)."""
     t_trans, switch_price, flops_tok = _static_costs(params, reqs)
@@ -175,7 +236,11 @@ def score_matrix(params: FleetParams, state: FleetState, reqs: RequestBatch):
     backlog = state.queue_tokens[None, :] * flops_tok[:, None]
     work = (reqs.gen_tokens * flops_tok)[:, None]
     t_comp = (backlog + work) / params.flops_per_s[None, :]
-    return t_trans + t_switch + t_comp
+    score = t_trans + t_switch + t_comp
+    visible = cell_mask(params, reqs)
+    if visible is not None:
+        score = jnp.where(visible, score, jnp.inf)
+    return score
 
 
 # ---------------------------------------------------------------------------
@@ -234,6 +299,16 @@ def route_batch(
     exactly like B sequential ``ModelAwareRouter.route`` calls, each
     followed by ``drain(drain_tokens)`` (scalar or (B,); None — the
     default — skips the drain update entirely in the compiled scan).
+
+    Cell/drain knobs (both compiled out of the scan when absent):
+      * ``reqs.cell`` + ``params.cell`` — block-diagonal visibility:
+        each request scores ``+inf`` on out-of-cell servers, with
+        ``CLOUD_CELL`` servers visible fleet-wide, so one call routes a
+        whole multi-cell fleet.
+      * ``reqs.arrival_s`` + ``params.drain_rate`` — time-based drain:
+        before a request is scored, every queue decays by
+        ``drain_rate * dt`` where ``dt`` is the wall-clock gap since the
+        carry clock ``state.time_s`` last advanced.
     """
     policy_fn = _resolve_policy(policy, actor)
     dtype = jnp.result_type(reqs.prompt_bits, params.uplink_bps)
@@ -248,16 +323,33 @@ def route_batch(
         else jnp.broadcast_to(jnp.asarray(drain_tokens, dtype),
                               reqs.model.shape)
     )
+    has_cells = params.cell is not None and reqs.cell is not None
+    has_time = params.drain_rate is not None and reqs.arrival_s is not None
+    drain_rate = params.drain_rate.astype(dtype) if has_time else None
+    arrivals = reqs.arrival_s.astype(dtype) if has_time else None
+    time0 = state.time_s if state.time_s is not None else 0.0
+    queue0 = state.queue_tokens.astype(dtype)
 
     def step(carry, xs):
-        resident, last_use, queue, clock = carry
-        model, t_trans_b, switch_b, flops_tok_b, work_b, drain_b, gen_b = xs
+        resident, last_use, queue, clock, time_s = carry
+        (model, t_trans_b, switch_b, flops_tok_b, work_b, drain_b, gen_b,
+         cell_b, arrival_b) = xs
+
+        if has_time:  # wall-clock queue decay since the last arrival
+            dt = jnp.maximum(arrival_b - time_s, 0.0)
+            queue = jnp.maximum(queue - drain_rate * dt, 0.0)
+            time_s = jnp.maximum(time_s, arrival_b)
         clock = clock + 1
 
         resident_m = resident[:, model]                         # (N,)
         t_switch = jnp.where(resident_m, 0.0, switch_b)
         t_comp = (queue * flops_tok_b + work_b) / params.flops_per_s
         lats = t_trans_b + t_switch + t_comp                    # eq. 11
+        queue_vis = queue
+        if has_cells:  # out-of-cell servers can never win the argmin
+            visible = (params.cell == cell_b) | (params.cell == CLOUD_CELL)
+            lats = jnp.where(visible, lats, jnp.inf)
+            queue_vis = jnp.where(visible, queue, jnp.inf)
 
         if getattr(policy_fn, "needs_obs", True):
             # scalar _observe layout: [resident, queue, flops] per server
@@ -266,7 +358,12 @@ def route_batch(
             ).reshape(-1)                                       # (3N,)
         else:
             obs = None
-        choice = jnp.asarray(policy_fn(lats, obs, queue), jnp.int32)
+        choice = jnp.asarray(policy_fn(lats, obs, queue_vis), jnp.int32)
+        if has_cells:
+            # an actor may ignore the inf-masked inputs; never commit an
+            # out-of-cell choice — fall back to the masked greedy argmin
+            choice = jnp.where(visible[choice], choice,
+                               jnp.argmin(lats).astype(jnp.int32))
 
         # commit: LRU residency + queue, mirroring the scalar oracle
         row = resident[choice]
@@ -276,25 +373,40 @@ def route_batch(
             jnp.where(row, last_use[choice], jnp.iinfo(jnp.int32).max)
         )
         evict = ~was_resident & full
-        row = row.at[evict_idx].set(row[evict_idx] & ~evict)
-        row = row.at[model].set(True)
-        resident = resident.at[choice].set(row)
-        last_use = last_use.at[choice, model].set(clock)
-        queue = queue.at[choice].add(gen_b)
+        if has_cells:
+            # a cell with no members and no cloud column leaves every
+            # candidate at inf: reject (choice -1) without committing
+            ok = jnp.isfinite(lats[choice])
+            evict &= ok
+            row = row.at[evict_idx].set(row[evict_idx] & ~evict)
+            row = row.at[model].set(row[model] | ok)
+            resident = resident.at[choice].set(row)
+            last_use = last_use.at[choice, model].set(
+                jnp.where(ok, clock, last_use[choice, model])
+            )
+            queue = queue.at[choice].add(jnp.where(ok, gen_b, 0.0))
+            out = (jnp.where(ok, choice, -1), lats[choice],
+                   was_resident & ok)
+        else:
+            row = row.at[evict_idx].set(row[evict_idx] & ~evict)
+            row = row.at[model].set(True)
+            resident = resident.at[choice].set(row)
+            last_use = last_use.at[choice, model].set(clock)
+            queue = queue.at[choice].add(gen_b)
+            out = (choice, lats[choice], was_resident)
         if drain_b is not None:  # None is static: compiled out of the scan
             queue = jnp.maximum(queue - drain_b, 0.0)
+        return (resident, last_use, queue, clock, time_s), out
 
-        out = (choice, lats[choice], was_resident)
-        return (resident, last_use, queue, clock), out
-
-    carry = (state.resident, state.last_use, state.queue_tokens, state.clock)
+    carry = (state.resident, state.last_use, queue0, state.clock,
+             jnp.asarray(time0, dtype))
     xs = (reqs.model, t_trans, switch_price, flops_tok, work, drain,
-          gen_tokens)
-    (resident, last_use, queue, clock), (choice, latency, hit) = jax.lax.scan(
-        step, carry, xs, unroll=8
-    )
+          gen_tokens, reqs.cell if has_cells else None, arrivals)
+    ((resident, last_use, queue, clock, time_s),
+     (choice, latency, hit)) = jax.lax.scan(step, carry, xs, unroll=8)
     new_state = FleetState(
-        resident=resident, last_use=last_use, queue_tokens=queue, clock=clock
+        resident=resident, last_use=last_use, queue_tokens=queue, clock=clock,
+        time_s=time_s,
     )
     return new_state, RouteOutcome(choice=choice, latency=latency, hit=hit)
 

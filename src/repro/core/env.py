@@ -9,6 +9,13 @@ and emits per-agent rewards (eq. 18 inner term).
 
 All control flow is array arithmetic — the step jits and vmaps over
 parallel environments.
+
+Cell topology: with ``EnvParams.num_cells > 1`` the EDs and ESs are
+partitioned round-robin into edge cells (``ed_cell``/``es_cell``);
+offloading to an out-of-cell ES is infeasible (counted like a
+compatibility failure) and the observation's compatibility map only
+shows in-cell residency. ``num_cells == 1`` (the default) reproduces
+the paper's single-cell setting bit for bit.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ def default_params(
     num_ess: int = 3,
     key: int | None = None,
     faithful: bool = False,
+    num_cells: int = 1,
 ) -> EnvParams:
     """Paper §IV.A constants; unspecified ones documented in configs/paper_iiot.
 
@@ -39,6 +47,13 @@ def default_params(
     """
     import numpy as np
 
+    if num_cells > num_ess:
+        # round-robin assignment would leave cells with EDs but no ES:
+        # every offload there is permanently infeasible
+        raise ValueError(
+            f"num_cells={num_cells} > num_ess={num_ess}: some cells would "
+            "have no edge server"
+        )
     rng = np.random.default_rng(0 if key is None else key)
     model_bits = tuple(
         float(v) for v in rng.uniform(90.0, 250.0, num_models) * MB_TO_BITS
@@ -78,7 +93,18 @@ def default_params(
         area_m=1000.0,
         episode_len=40,
         faithful=faithful,
+        num_cells=num_cells,
     )
+
+
+def es_cell(p: EnvParams) -> jnp.ndarray:
+    """(N,) cell id per edge server — round-robin over ``num_cells``."""
+    return jnp.arange(p.num_ess, dtype=jnp.int32) % p.num_cells
+
+
+def ed_cell(p: EnvParams) -> jnp.ndarray:
+    """(M,) cell id per edge device — round-robin over ``num_cells``."""
+    return jnp.arange(p.num_eds, dtype=jnp.int32) % p.num_cells
 
 
 def lru_keep(cache_row, last_row, slots: int):
@@ -155,7 +181,9 @@ def observe(state: EnvState, p: EnvParams) -> jnp.ndarray:
         jnp.full((n,), p.f_es / p.f_cc, jnp.float32)[None, :], (m, n)
     )
     # d_{m,i,n}: does ES n hold the model this agent's task needs?
+    # (masked to the agent's own cell — out-of-cell ESs are unreachable)
     compat = state.cache[:, state.task.mu].T  # (M, N)
+    compat = compat * (es_cell(p)[None, :] == ed_cell(p)[:, None])
     own_pos = state.ed_pos / p.area_m
     es_pos = jnp.broadcast_to(
         (state.es_pos / p.area_m).reshape(-1)[None, :], (m, 2 * n)
@@ -202,8 +230,13 @@ def step(state: EnvState, act: Action, p: EnvParams):
     # --- model residency / switching (eqs. 7-8) -----------------------------
     need = state.task.mu  # model index == task type
     cached = state.cache[es_idx, need]  # (M,)
-    wants_download = offloaded & (cached < 0.5) & (act.beta > 0.5)
-    failed_compat = offloaded & (cached < 0.5) & (act.beta <= 0.5)
+    # cell feasibility: offloading to an out-of-cell ES cannot succeed
+    # (num_cells == 1 makes in_cell all-True, reproducing the paper setting)
+    in_cell = es_cell(p)[es_idx] == ed_cell(p)
+    wants_download = offloaded & in_cell & (cached < 0.5) & (act.beta > 0.5)
+    failed_compat = offloaded & (
+        ~in_cell | ((cached < 0.5) & (act.beta <= 0.5))
+    )
 
     model_bits = jnp.asarray(p.model_bits)[need]
     t_switch = jnp.where(
@@ -254,7 +287,7 @@ def step(state: EnvState, act: Action, p: EnvParams):
     )
 
     # --- cache transition with LRU eviction ----------------------------------
-    hit = offloaded & (cached > 0.5)
+    hit = offloaded & in_cell & (cached > 0.5)
     use_inc = (
         jnp.zeros((n, p.num_models))
         .at[es_idx, need]

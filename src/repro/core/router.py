@@ -17,12 +17,29 @@ Two policies share the scoring code:
 The router maintains LRU residency exactly like the environment, so a
 policy trained in `core.env` transfers unchanged.
 
+Multi-cell fleets: every server belongs to a ``cell`` (an edge site /
+base-station coverage area); a request tagged with a cell only sees the
+servers of that cell plus any server in the reserved ``CLOUD_CELL`` —
+the cloud-fallback column, visible fleet-wide and priced through the
+backhaul (its effective uplink folds the extra hop; see
+``launch.serve.make_cloud_server``). Out-of-cell candidates score
+``+inf`` and are never chosen.
+
+Time-based drain: servers complete queued work continuously at
+``drain_rate`` tokens/sec. Requests carry an ``arrival_s`` wall-clock
+stamp; before a request is scored, every queue decays by
+``drain_rate * dt`` where ``dt`` is the time elapsed since the fleet
+clock last advanced. ``drain_rate == 0`` (the default) reproduces the
+original synchronous behaviour exactly. The explicit ``drain(tokens)``
+call remains for per-request token drains.
+
 This implementation routes ONE request per call through readable Python
 dataclass mutation. It is deliberately kept that way: it is the ground
 truth that ``core.batch_router`` — the jitted, fleet-scale batched path
 used by ``launch/serve.py`` — must match request for request
-(tests/test_batch_router.py pins choices, latencies, residency and LRU
-evictions against it). Serving code should use ``core.batch_router``.
+(tests/test_batch_router.py and tests/test_multicell_router.py pin
+choices, latencies, residency and LRU evictions against it). Serving
+code should use ``core.batch_router``.
 """
 from __future__ import annotations
 
@@ -31,6 +48,9 @@ import dataclasses
 import numpy as np
 
 from repro.core.catalog import CatalogEntry
+
+#: Reserved cell id for cloud-fallback servers: visible from every cell.
+CLOUD_CELL = -1
 
 
 @dataclasses.dataclass
@@ -43,6 +63,8 @@ class EdgeServer:
     resident: list[int] = dataclasses.field(default_factory=list)
     last_use: dict = dataclasses.field(default_factory=dict)
     queue_tokens: float = 0.0  # outstanding work, FIFO
+    cell: int = 0              # edge site; CLOUD_CELL == visible fleet-wide
+    drain_rate: float = 0.0    # tokens/sec completed continuously
 
 
 @dataclasses.dataclass
@@ -50,6 +72,8 @@ class Request:
     model: int
     prompt_bits: float
     gen_tokens: int
+    cell: int = 0              # which cell the requesting device sits in
+    arrival_s: float | None = None  # wall-clock arrival (None: no time drain)
 
 
 class ModelAwareRouter:
@@ -60,6 +84,7 @@ class ModelAwareRouter:
         self.policy = policy
         self.actor = actor
         self.clock = 0
+        self.time_s = 0.0  # wall clock for the time-based drain
 
     # ------------------------------------------------------------------
     def _candidate_latency(self, srv: EdgeServer, req: Request) -> float:
@@ -74,14 +99,39 @@ class ModelAwareRouter:
         t_comp = (backlog + work) / srv.flops_per_s                 # eq. (9)
         return t_trans + t_switch + t_comp                          # eq. (11)
 
+    def _visible(self, srv: EdgeServer, req: Request) -> bool:
+        """Cell visibility: in-cell servers plus the fleet-wide cloud."""
+        return srv.cell == req.cell or srv.cell == CLOUD_CELL
+
+    def advance_time(self, t_s: float):
+        """Drain every queue by ``drain_rate * dt`` up to wall clock ``t_s``."""
+        dt = max(float(t_s) - self.time_s, 0.0)
+        for s in self.servers:
+            s.queue_tokens = max(0.0, s.queue_tokens - s.drain_rate * dt)
+        self.time_s = max(self.time_s, float(t_s))
+
     def route(self, req: Request) -> tuple[int, float]:
         """Returns (server index, predicted latency) and commits state."""
+        if req.arrival_s is not None:
+            self.advance_time(req.arrival_s)
         self.clock += 1
-        lats = [self._candidate_latency(s, req) for s in self.servers]
+        lats = [
+            self._candidate_latency(s, req) if self._visible(s, req)
+            else float("inf")
+            for s in self.servers
+        ]
         if self.policy == "actor" and self.actor is not None:
             choice = int(self.actor(self._observe(req), lats))
+            if not self._visible(self.servers[choice], req):
+                # never commit an out-of-cell actor choice — fall back to
+                # the masked greedy argmin (mirrors the batched path)
+                choice = int(np.argmin(lats))
         else:
             choice = int(np.argmin(lats))
+        if not np.isfinite(lats[choice]):
+            # no feasible server (cell with no members and no cloud
+            # column): reject without mutating any state
+            return -1, float("inf")
         srv = self.servers[choice]
         # commit: LRU residency + queue
         if req.model not in srv.resident:

@@ -70,6 +70,11 @@ class EnvParams(NamedTuple):
     # faithfulness switch: use eqs. (4)/(10)/(14) exactly as printed
     faithful: bool
 
+    # cell topology: EDs/ESs are partitioned round-robin into this many
+    # edge cells; offloading is only feasible within the ED's own cell
+    # (1 — the default — reproduces the paper's single-cell setting)
+    num_cells: int = 1
+
 
 class Task(NamedTuple):
     """One AIGC task per ED (paper eq. 1), vectorised over M."""

@@ -9,7 +9,22 @@ Wires the paper's scheduling layer to the real model plane:
   * actual prefill+decode of the routed batch through ``models.lm`` on
     the local device (reduced configs on CPU).
 
+Cell / drain knobs (the multi-cell + time-based-drain serving path):
+  * ``--cells C`` partitions the fleet into C edge cells of
+    ``--servers`` servers each, plus ONE cloud-fallback server
+    (``make_cloud_server``) in the reserved ``CLOUD_CELL`` that every
+    request can reach at backhaul-folded uplink pricing. Requests are
+    tagged with a uniformly random cell and the whole C-cell fleet is
+    still routed in a single jitted call (block-diagonal score mask).
+  * ``--drain-rate R`` gives every edge server R tokens/sec of
+    continuous queue drain; requests then carry Poisson-ish arrival
+    stamps (``--arrival-rate`` req/s fleet-wide) and queue decay tracks
+    wall clock inside the scan carry rather than request count.
+    ``--drain-rate 0`` (default) keeps the legacy synchronous drain.
+
     python -m repro.launch.serve --requests 64 --servers 3
+    python -m repro.launch.serve --requests 256 --servers 4 --cells 4 \
+        --drain-rate 50 --arrival-rate 100 --no-execute
 """
 from __future__ import annotations
 
@@ -23,30 +38,70 @@ import numpy as np
 from repro.configs import get_arch, list_archs, reduced
 from repro.core import batch_router
 from repro.core.catalog import build_catalog
-from repro.core.router import EdgeServer
+from repro.core.router import CLOUD_CELL, EdgeServer
 from repro.models import lm
 
 
-def make_fleet(n_servers: int, catalog, flops=197e12, slots=2):
+def make_fleet(n_servers: int, catalog, flops=197e12, slots=2, cell=0,
+               drain_rate=0.0):
+    """One cell of ``n_servers`` edge servers with staggered residencies."""
     return [
         EdgeServer(
-            name=f"es{i}", flops_per_s=flops, cache_slots=slots,
+            name=f"c{cell}-es{i}", flops_per_s=flops, cache_slots=slots,
             uplink_bps=100e6, backhaul_bps=1e9,
             resident=[(2 * i + j) % len(catalog) for j in range(slots)],
+            cell=cell, drain_rate=drain_rate,
         )
         for i in range(n_servers)
     ]
 
 
+def make_cloud_server(catalog, flops=2e15, uplink_bps=100e6,
+                      backhaul_bps=1e9, drain_rate=0.0):
+    """Cloud-fallback column: every model resident, visible fleet-wide.
+
+    The cloud sits behind the backhaul, so its effective uplink folds the
+    extra hop: 1/u_eff = 1/uplink + 1/backhaul (prompt bits traverse
+    both links in series). With all models resident it never pays the
+    eq. 7 switch, but the slower path + shared queue keep it a fallback
+    rather than a free lunch."""
+    u_eff = 1.0 / (1.0 / uplink_bps + 1.0 / backhaul_bps)
+    return EdgeServer(
+        name="cloud", flops_per_s=flops, cache_slots=len(catalog),
+        uplink_bps=u_eff, backhaul_bps=backhaul_bps,
+        resident=list(range(len(catalog))),
+        cell=CLOUD_CELL, drain_rate=drain_rate,
+    )
+
+
+def make_multicell_fleet(n_cells: int, servers_per_cell: int, catalog,
+                         flops=197e12, slots=2, drain_rate=0.0,
+                         cloud=True):
+    """C cells x N servers (+ one cloud fallback), one flat server list."""
+    fleet = []
+    for c in range(n_cells):
+        fleet.extend(
+            make_fleet(servers_per_cell, catalog, flops=flops, slots=slots,
+                       cell=c, drain_rate=drain_rate)
+        )
+    if cloud:
+        fleet.append(make_cloud_server(catalog, drain_rate=drain_rate))
+    return fleet
+
+
 def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
-          gen_tokens=8):
+          gen_tokens=8, n_cells=1, drain_rate=0.0, arrival_rate=100.0):
     rng = np.random.default_rng(seed)
     # serve the edge-suitable (small) members of the catalogue
     edge_archs = ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
     catalog = build_catalog(edge_archs)
-    fleet_params, fleet_state = batch_router.fleet_from_servers(
-        make_fleet(n_servers, catalog), catalog
-    )
+    multicell = n_cells > 1
+    if multicell:
+        fleet = make_multicell_fleet(n_cells, n_servers, catalog,
+                                     drain_rate=drain_rate)
+    else:
+        fleet = make_fleet(n_servers, catalog, drain_rate=drain_rate)
+    fleet_params, fleet_state = batch_router.fleet_from_servers(fleet, catalog)
 
     # local reduced models actually generate tokens for routed requests
     models = {}
@@ -55,18 +110,36 @@ def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
             cfg = reduced(get_arch(e.name))
             models[e.index] = (cfg, lm.init_params(jax.random.key(e.index), cfg))
 
+    # Poisson-process arrival stamps drive the time-based drain
+    arrivals = (
+        jnp.asarray(
+            np.cumsum(rng.exponential(1.0 / arrival_rate, num_requests)),
+            jnp.float32,
+        )
+        if drain_rate > 0.0
+        else None
+    )
     reqs = batch_router.RequestBatch(
         model=jnp.asarray(rng.integers(0, len(catalog), num_requests), jnp.int32),
         prompt_bits=jnp.asarray(rng.uniform(1e5, 1e6, num_requests), jnp.float32),
         gen_tokens=jnp.full((num_requests,), gen_tokens, jnp.float32),
+        cell=(
+            jnp.asarray(rng.integers(0, n_cells, num_requests), jnp.int32)
+            if multicell else None
+        ),
+        arrival_s=arrivals,
     )
 
-    # route the WHOLE batch in one jitted call (sequential-commit scan);
-    # each routed request drains the fleet like the old per-request loop
+    # route the WHOLE batch (all cells) in one jitted call
+    # (sequential-commit scan). With drain_rate > 0 the queues decay by
+    # drain_rate * dt between arrivals; otherwise each routed request
+    # drains the fleet like the old per-request loop.
     t0 = time.time()
     fleet_state, out = batch_router.route_batch(
         fleet_params, fleet_state, reqs,
-        gen_tokens * n_servers / max(num_requests, 1), policy=policy,
+        None if drain_rate > 0.0
+        else gen_tokens * len(fleet) / max(num_requests, 1),
+        policy=policy,
     )
     jax.block_until_ready(out.choice)
     route_s = time.time() - t0
@@ -100,19 +173,36 @@ def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
     stats["route_s"] = route_s
     stats["wall_s"] = time.time() - t0
     stats["requests"] = num_requests
+    stats["cells"] = n_cells
+    stats["servers"] = len(fleet)
+    if multicell:
+        cloud = len(fleet) - 1  # the cloud column is appended last
+        stats["cloud_fallback_rate"] = float(
+            np.mean(np.asarray(out.choice) == cloud)
+        )
     return stats
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--servers", type=int, default=3)
+    ap.add_argument("--servers", type=int, default=3,
+                    help="edge servers per cell")
+    ap.add_argument("--cells", type=int, default=1,
+                    help=">1 adds a block-diagonal cell mask + cloud column")
+    ap.add_argument("--drain-rate", type=float, default=0.0,
+                    help="tokens/sec continuous queue drain (0 = legacy "
+                         "synchronous per-request drain)")
+    ap.add_argument("--arrival-rate", type=float, default=100.0,
+                    help="fleet-wide request arrivals per second (drives "
+                         "the time-based drain)")
     ap.add_argument("--policy", default="greedy", choices=["greedy", "load"])
     ap.add_argument("--no-execute", action="store_true",
                     help="route only (no local generation)")
     args = ap.parse_args()
     stats = serve(args.requests, args.servers, args.policy,
-                  execute=not args.no_execute)
+                  execute=not args.no_execute, n_cells=args.cells,
+                  drain_rate=args.drain_rate, arrival_rate=args.arrival_rate)
     for k, v in stats.items():
         print(f"{k}: {v}")
 

@@ -1,0 +1,86 @@
+"""Docs can't silently rot: import-check every example and assert the
+commands/paths quoted in README.md (and the README's table links) exist.
+
+Import is cheap because every example keeps work behind a ``main()``
+guard; actually executing them is the examples' own job (CI tier-2).
+"""
+import importlib.util
+import re
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+README = (REPO / "README.md").read_text()
+EXAMPLES = sorted((REPO / "examples").glob("*.py"))
+
+
+@pytest.mark.parametrize("path", EXAMPLES, ids=lambda p: p.name)
+def test_example_imports_cleanly(path):
+    """Every example module imports (no work outside the main() guard)."""
+    name = f"_docs_example_{path.stem}"
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[name] = mod
+    try:
+        spec.loader.exec_module(mod)
+        assert hasattr(mod, "main"), f"{path.name} has no main()"
+    finally:
+        sys.modules.pop(name, None)
+
+
+def _quoted_commands(text):
+    """All `python ...` invocations in fenced or inline code blocks."""
+    fenced = re.findall(r"```(?:\w*\n)?(.*?)```", text, re.S)
+    lines = [ln for block in fenced for ln in block.splitlines()]
+    lines += re.findall(r"`([^`]+)`", text)
+    cmds = []
+    for ln in lines:
+        ln = ln.strip().lstrip("$ ").replace("\\", " ")
+        if "python " in ln:
+            cmds.append(ln)
+    return cmds
+
+
+def test_readme_quotes_real_commands():
+    cmds = _quoted_commands(README)
+    assert cmds, "README quotes no runnable commands"
+    joined = "\n".join(cmds)
+    # the core entry points the README promises must be quoted
+    for needle in ("examples/quickstart.py", "examples/serve_edge.py",
+                   "benchmarks.run", "-m pytest"):
+        assert needle in joined, f"README no longer quotes {needle}"
+    for cmd in cmds:
+        for tok in cmd.split():
+            if tok.endswith(".py"):  # quoted script paths must exist
+                assert (REPO / tok).is_file(), f"README quotes missing {tok}"
+    # quoted `python -m pkg.mod` modules must resolve to real files
+    for mod in re.findall(r"-m\s+([\w.]+)", joined):
+        if mod == "pytest":
+            continue
+        rel = Path(mod.replace(".", "/"))
+        hit = any(
+            (root / rel).with_suffix(".py").is_file()
+            or (root / rel / "__main__.py").is_file()
+            for root in (REPO, REPO / "src")
+        )
+        assert hit, f"README quotes unresolvable module {mod}"
+
+
+def test_readme_links_resolve():
+    """Relative markdown links ([x](path)) in README + docs/ must exist."""
+    for md in [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]:
+        for target in re.findall(r"\]\(([^)#`\s]+)\)", md.read_text()):
+            if "://" in target:
+                continue
+            resolved = (md.parent / target).resolve()
+            assert resolved.exists(), f"{md.name} links missing {target}"
+
+
+def test_readme_test_commands_match_roadmap():
+    """README's tier-1 command stays in sync with ROADMAP's verify line."""
+    roadmap = (REPO / "ROADMAP.md").read_text()
+    assert "python -m pytest -x -q" in README
+    assert "python -m pytest -x -q" in roadmap
+    assert 'not slow' in README  # fast tier documented

@@ -177,3 +177,52 @@ def test_contention_raises_latency(p):
     _, _, out_crowd, _ = env_lib.step(state, crowd, p)
     _, _, out_spread, _ = env_lib.step(state, spread, p)
     assert float(out_crowd.latency.mean()) > float(out_spread.latency.mean())
+
+
+def test_cross_cell_offload_is_infeasible():
+    """num_cells=2: offloading to an out-of-cell ES counts as failed."""
+    pp = env_lib.default_params(num_eds=4, num_models=2, num_ess=4,
+                                num_cells=2)
+    # round-robin: ED cells [0,1,0,1], ES cells [0,1,0,1]; all target ES 1
+    state = env_lib.reset(jax.random.key(2), pp)
+    act = Action(target=jnp.full((4,), 2, jnp.int32),  # ES index 1 (cell 1)
+                 eta=jnp.ones((4,)), beta=jnp.ones((4,)))
+    _, _, out, _ = env_lib.step(state, act, pp)
+    assert out.failed_compat.tolist() == [1.0, 0.0, 1.0, 0.0]
+    assert out.completed.tolist()[0] == 0.0 and out.completed.tolist()[2] == 0.0
+    # cross-cell attempts must not download into the foreign ES's cache
+    assert out.switch_latency[0] == 0.0 and out.switch_latency[2] == 0.0
+
+
+def test_single_cell_default_keeps_paper_setting(p):
+    """num_cells=1 (default): cell masks are all-visible no-ops."""
+    assert p.num_cells == 1
+    assert env_lib.es_cell(p).tolist() == [0] * p.num_ess
+    assert env_lib.ed_cell(p).tolist() == [0] * p.num_eds
+    state, outs = _rollout(p, baselines.random_policy, steps=8)
+    explicit = env_lib.default_params(num_eds=6, num_models=4, num_cells=1)
+    state2, outs2 = _rollout(explicit, baselines.random_policy, steps=8)
+    for a, b in zip(outs, outs2):
+        assert bool(jnp.all(a.reward == b.reward))
+        assert bool(jnp.all(a.latency == b.latency))
+
+
+def test_observe_masks_out_of_cell_compat():
+    """The compat slice only shows residency of in-cell servers."""
+    pp = env_lib.default_params(num_eds=4, num_models=3, num_ess=4,
+                                num_cells=2)
+    state = env_lib.reset(jax.random.key(4), pp)
+    obs = env_lib.observe(state, pp)
+    sl = baselines._obs_slices(pp)
+    compat = obs[:, sl["compat"][0]:sl["compat"][1]]  # (M, N)
+    in_cell = env_lib.es_cell(pp)[None, :] == env_lib.ed_cell(pp)[:, None]
+    assert bool(jnp.all(jnp.where(in_cell, True, compat == 0.0)))
+    full = state.cache[:, state.task.mu].T
+    assert bool(jnp.all(jnp.where(in_cell, compat == full, True)))
+
+
+def test_num_cells_exceeding_servers_rejected():
+    """Cells with EDs but no ES are a silent-degeneracy trap: refused."""
+    with pytest.raises(ValueError, match="num_cells"):
+        env_lib.default_params(num_eds=8, num_models=2, num_ess=3,
+                               num_cells=4)

@@ -1,0 +1,345 @@
+"""Multi-cell fleets + time-based drain vs the scalar oracle — exact.
+
+The block-diagonal cell mask (in-cell servers + the fleet-wide
+``CLOUD_CELL`` fallback column) and the wall-clock queue drain
+(``drain_rate * dt`` folded into the scan carry) must reproduce the
+scalar ``ModelAwareRouter`` request for request, for C in {1, 2, 4}
+cells — same choices, residency, LRU clocks, queues and fleet clock.
+The time-based drain is additionally pinned against a hand-computed
+queue trace, and ``drain_rate == 0`` must reproduce the synchronous
+(PR 1) behaviour bit for bit.
+"""
+import copy
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core import batch_router as br
+from repro.core.catalog import build_catalog
+from repro.core.router import CLOUD_CELL, EdgeServer, ModelAwareRouter, Request
+from repro.launch.serve import make_cloud_server, make_multicell_fleet
+
+CATALOG = build_catalog(
+    ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
+)
+
+
+def _random_multicell_fleet(rng, n_cells, per_cell, cache_slots=2,
+                            drain_hi=40.0, cloud=True):
+    fleet = [
+        EdgeServer(
+            name=f"c{c}-es{i}",
+            flops_per_s=float(rng.uniform(5e13, 2e14)),
+            cache_slots=cache_slots,
+            uplink_bps=float(rng.uniform(5e7, 2e8)),
+            backhaul_bps=float(rng.uniform(5e8, 2e9)),
+            resident=list(
+                rng.choice(len(CATALOG), size=cache_slots, replace=False)
+            ),
+            cell=c,
+            drain_rate=float(rng.uniform(0.0, drain_hi)),
+        )
+        for c in range(n_cells)
+        for i in range(per_cell)
+    ]
+    if cloud:
+        fleet.append(
+            make_cloud_server(
+                CATALOG, drain_rate=float(rng.uniform(0.0, 2.0 * drain_hi))
+            )
+        )
+    return fleet
+
+
+def _random_stream(rng, n, n_cells, rate=500.0):
+    return (
+        rng.integers(0, len(CATALOG), n),
+        rng.uniform(1e5, 1e6, n),
+        rng.integers(1, 64, n),
+        rng.integers(0, n_cells, n),
+        np.cumsum(rng.exponential(1.0 / rate, n)),
+    )
+
+
+def _run_scalar(fleet, models, bits, toks, cells, arrivals):
+    router = ModelAwareRouter(copy.deepcopy(fleet), CATALOG)
+    choices, lats = [], []
+    for m, b, t, c, a in zip(models, bits, toks, cells, arrivals):
+        ch, l = router.route(
+            Request(int(m), float(b), int(t), cell=int(c), arrival_s=float(a))
+        )
+        choices.append(ch)
+        lats.append(l)
+    return router, np.array(choices), np.array(lats)
+
+
+def _run_batched(fleet, models, bits, toks, cells, arrivals, dtype):
+    params, state = br.fleet_from_servers(fleet, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, dtype),
+        gen_tokens=jnp.asarray(toks, dtype),
+        cell=jnp.asarray(cells, jnp.int32),
+        arrival_s=jnp.asarray(arrivals, dtype),
+    )
+    return br.route_batch(params, state, reqs)
+
+
+def _assert_fleet_state_matches(router, state):
+    resident = np.asarray(state.resident)
+    last_use = np.asarray(state.last_use)
+    for i, srv in enumerate(router.servers):
+        assert set(np.nonzero(resident[i])[0]) == set(srv.resident), i
+        for m in srv.resident:
+            if m in srv.last_use:
+                assert last_use[i, m] == srv.last_use[m], (i, m)
+    np.testing.assert_allclose(
+        np.asarray(state.queue_tokens),
+        np.array([s.queue_tokens for s in router.servers]),
+        rtol=1e-6, atol=1e-9,
+    )
+    np.testing.assert_allclose(float(state.time_s), router.time_s, rtol=1e-6)
+
+
+@pytest.mark.parametrize("seed,n_cells,per_cell", [
+    (0, 1, 4), (1, 2, 3), (2, 4, 2), (3, 4, 4),
+])
+def test_multicell_matches_scalar_oracle_exactly(seed, n_cells, per_cell):
+    """x64: C-cell fleets with cloud + time drain match the oracle."""
+    with enable_x64():
+        rng = np.random.default_rng(seed)
+        fleet = _random_multicell_fleet(rng, n_cells, per_cell)
+        models, bits, toks, cells, arrivals = _random_stream(
+            rng, 300, n_cells
+        )
+        router, sc_choice, sc_lat = _run_scalar(
+            fleet, models, bits, toks, cells, arrivals
+        )
+        state, out = _run_batched(
+            fleet, models, bits, toks, cells, arrivals, jnp.float64
+        )
+        np.testing.assert_array_equal(np.asarray(out.choice), sc_choice)
+        np.testing.assert_allclose(np.asarray(out.latency), sc_lat,
+                                   rtol=1e-12, atol=0.0)
+        _assert_fleet_state_matches(router, state)
+
+
+@pytest.mark.parametrize("seed,n_cells", [(10, 2), (11, 4)])
+def test_float32_multicell_same_decisions(seed, n_cells):
+    """The f32 serving path agrees on every choice and residency set."""
+    rng = np.random.default_rng(seed)
+    fleet = _random_multicell_fleet(rng, n_cells, 3)
+    models, bits, toks, cells, arrivals = _random_stream(rng, 400, n_cells)
+    router, sc_choice, _ = _run_scalar(
+        fleet, models, bits, toks, cells, arrivals
+    )
+    state, out = _run_batched(
+        fleet, models, bits, toks, cells, arrivals, jnp.float32
+    )
+    np.testing.assert_array_equal(np.asarray(out.choice), sc_choice)
+    resident = np.asarray(state.resident)
+    for i, srv in enumerate(router.servers):
+        assert set(np.nonzero(resident[i])[0]) == set(srv.resident), i
+
+
+def test_choices_respect_cell_boundaries():
+    """No request ever lands on an out-of-cell edge server."""
+    rng = np.random.default_rng(5)
+    fleet = _random_multicell_fleet(rng, 4, 3)
+    models, bits, toks, cells, arrivals = _random_stream(rng, 500, 4)
+    _, out = _run_batched(
+        fleet, models, bits, toks, cells, arrivals, jnp.float32
+    )
+    srv_cell = np.array([s.cell for s in fleet])
+    chosen = srv_cell[np.asarray(out.choice)]
+    assert np.all((chosen == cells) | (chosen == CLOUD_CELL))
+    # the cell-starved layout must actually exercise the cloud column
+    assert np.any(chosen == CLOUD_CELL) or len(set(cells)) == 1
+
+
+def test_score_matrix_masks_out_of_cell_servers():
+    """(B, N) scores are +inf exactly on the out-of-cell, non-cloud pairs."""
+    rng = np.random.default_rng(6)
+    fleet = _random_multicell_fleet(rng, 3, 2)
+    params, state = br.fleet_from_servers(fleet, CATALOG)
+    models, bits, toks, cells, _ = _random_stream(rng, 40, 3)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+        cell=jnp.asarray(cells, jnp.int32),
+    )
+    scores = np.asarray(br.score_matrix(params, state, reqs))
+    srv_cell = np.array([s.cell for s in fleet])
+    visible = (srv_cell[None, :] == cells[:, None]) | (
+        srv_cell[None, :] == CLOUD_CELL
+    )
+    assert np.all(np.isinf(scores[~visible]))
+    assert np.all(np.isfinite(scores[visible]))
+
+
+def test_time_drain_matches_hand_computed_trace():
+    """Queue decay over a synthetic wall-clock schedule, checked by hand.
+
+    Two single-server cells force every choice, so the queues follow
+    arithmetic we can do on paper:
+      r0 cell0 t=1.0 gen=10:   dt=1.0  q=(0,0)          -> commit (10, 0)
+      r1 cell1 t=2.0 gen=5:    dt=1.0  q=(10-2, 0)      -> commit (8, 5)
+      r2 cell0 t=4.5 gen=3:    dt=2.5  q=(8-5, 5-7.5|0) -> commit (6, 0)
+      r3 cell0 t=4.5 gen=1:    dt=0.0  q=(6, 0)         -> commit (7, 0)
+    """
+    with enable_x64():
+        mk = lambda cell, drain: EdgeServer(
+            name=f"s{cell}", flops_per_s=1e14, cache_slots=len(CATALOG),
+            uplink_bps=1e8, backhaul_bps=1e9,
+            resident=list(range(len(CATALOG))), cell=cell, drain_rate=drain,
+        )
+        fleet = [mk(0, 2.0), mk(1, 3.0)]
+        params, state = br.fleet_from_servers(fleet, CATALOG)
+        reqs = br.RequestBatch(
+            model=jnp.zeros((4,), jnp.int32),
+            prompt_bits=jnp.full((4,), 1e5, jnp.float64),
+            gen_tokens=jnp.asarray([10.0, 5.0, 3.0, 1.0], jnp.float64),
+            cell=jnp.asarray([0, 1, 0, 0], jnp.int32),
+            arrival_s=jnp.asarray([1.0, 2.0, 4.5, 4.5], jnp.float64),
+        )
+        state, out = br.route_batch(params, state, reqs)
+        np.testing.assert_array_equal(np.asarray(out.choice), [0, 1, 0, 0])
+        np.testing.assert_allclose(
+            np.asarray(state.queue_tokens), [7.0, 0.0], rtol=0, atol=0
+        )
+        assert float(state.time_s) == 4.5
+
+
+def test_drain_rate_zero_is_exactly_synchronous():
+    """drain_rate == 0 with arrival stamps == the PR 1 no-drain path, bit
+    for bit (choices, latencies, queues, residency, LRU clocks)."""
+    rng = np.random.default_rng(14)
+    fleet = _random_multicell_fleet(rng, 2, 3, drain_hi=0.0)
+    assert all(s.drain_rate == 0.0 for s in fleet)
+    models, bits, toks, cells, arrivals = _random_stream(rng, 250, 2)
+
+    params, state = br.fleet_from_servers(fleet, CATALOG)
+    base = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+        cell=jnp.asarray(cells, jnp.int32),
+    )
+    timed = base._replace(arrival_s=jnp.asarray(arrivals, jnp.float32))
+
+    state_sync, out_sync = br.route_batch(params, state, base)
+    state_time, out_time = br.route_batch(params, state, timed)
+
+    np.testing.assert_array_equal(np.asarray(out_sync.choice),
+                                  np.asarray(out_time.choice))
+    np.testing.assert_array_equal(np.asarray(out_sync.latency),
+                                  np.asarray(out_time.latency))
+    np.testing.assert_array_equal(np.asarray(state_sync.queue_tokens),
+                                  np.asarray(state_time.queue_tokens))
+    np.testing.assert_array_equal(np.asarray(state_sync.resident),
+                                  np.asarray(state_time.resident))
+    np.testing.assert_array_equal(np.asarray(state_sync.last_use),
+                                  np.asarray(state_time.last_use))
+
+
+def test_midstream_snapshot_carries_wall_clock():
+    """Snapshotting the oracle mid-stream must thread time_s or the next
+    batched drain would replay the whole elapsed wall clock."""
+    with enable_x64():
+        rng = np.random.default_rng(15)
+        fleet = _random_multicell_fleet(rng, 2, 2)
+        models, bits, toks, cells, arrivals = _random_stream(rng, 200, 2)
+
+        router, sc_choice, _ = _run_scalar(
+            fleet, models, bits, toks, cells, arrivals
+        )
+
+        half = 100
+        warm = ModelAwareRouter(copy.deepcopy(fleet), CATALOG)
+        for m, b, t, c, a in zip(models[:half], bits[:half], toks[:half],
+                                 cells[:half], arrivals[:half]):
+            warm.route(Request(int(m), float(b), int(t), cell=int(c),
+                               arrival_s=float(a)))
+        params, state = br.fleet_from_servers(
+            warm.servers, CATALOG, clock=warm.clock, time_s=warm.time_s
+        )
+        reqs = br.RequestBatch(
+            model=jnp.asarray(models[half:], jnp.int32),
+            prompt_bits=jnp.asarray(bits[half:], jnp.float64),
+            gen_tokens=jnp.asarray(toks[half:], jnp.float64),
+            cell=jnp.asarray(cells[half:], jnp.int32),
+            arrival_s=jnp.asarray(arrivals[half:], jnp.float64),
+        )
+        state, out = br.route_batch(params, state, reqs)
+        np.testing.assert_array_equal(np.asarray(out.choice),
+                                      sc_choice[half:])
+        _assert_fleet_state_matches(router, state)
+
+
+def test_actor_cannot_escape_cell_mask():
+    """An actor that picks out-of-cell servers is clamped to the masked
+    greedy argmin — identically in the scalar and batched paths."""
+
+    def rogue_actor(obs, lats):
+        return jnp.int32(0)  # always server 0, whatever the cell
+
+    rng = np.random.default_rng(16)
+    fleet = _random_multicell_fleet(rng, 3, 2)
+    models, bits, toks, cells, arrivals = _random_stream(rng, 150, 3)
+
+    router = ModelAwareRouter(copy.deepcopy(fleet), CATALOG,
+                              policy="actor", actor=rogue_actor)
+    sc_choice = [
+        router.route(Request(int(m), float(b), int(t), cell=int(c),
+                             arrival_s=float(a)))[0]
+        for m, b, t, c, a in zip(models, bits, toks, cells, arrivals)
+    ]
+
+    params, state = br.fleet_from_servers(fleet, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+        cell=jnp.asarray(cells, jnp.int32),
+        arrival_s=jnp.asarray(arrivals, jnp.float32),
+    )
+    state, out = br.route_batch(params, state, reqs, policy="actor",
+                                actor=rogue_actor)
+    np.testing.assert_array_equal(np.asarray(out.choice),
+                                  np.array(sc_choice))
+    srv_cell = np.array([s.cell for s in fleet])
+    chosen = srv_cell[np.asarray(out.choice)]
+    assert np.all((chosen == cells) | (chosen == CLOUD_CELL))
+    # server 0 (cell 0) must still be honoured for cell-0 requests
+    assert np.any(np.asarray(out.choice)[cells == 0] == 0)
+
+
+def test_orphan_cell_requests_are_rejected_uncommitted():
+    """A cell with no servers and no cloud column: choice -1, inf latency,
+    and NO state mutation — identically in scalar and batched paths."""
+    rng = np.random.default_rng(17)
+    fleet = _random_multicell_fleet(rng, 2, 2, cloud=False)
+    # cells: request 0 is routable (cell 0); request 1 references cell 5
+    models = np.array([0, 1, 2])
+    bits = np.array([2e5, 3e5, 4e5])
+    toks = np.array([8, 16, 4])
+    cells = np.array([0, 5, 1])
+    arrivals = np.array([0.1, 0.2, 0.3])
+
+    router, sc_choice, sc_lat = _run_scalar(
+        fleet, models, bits, toks, cells, arrivals
+    )
+    state, out = _run_batched(
+        fleet, models, bits, toks, cells, arrivals, jnp.float32
+    )
+    assert sc_choice.tolist()[1] == -1 and np.isinf(sc_lat[1])
+    np.testing.assert_array_equal(np.asarray(out.choice), sc_choice)
+    assert np.isinf(np.asarray(out.latency)[1])
+    assert not bool(np.asarray(out.hit)[1])
+    _assert_fleet_state_matches(router, state)
+    # the orphan's model must not have been cached anywhere new
+    initially = np.array([1 in s.resident for s in fleet])
+    np.testing.assert_array_equal(np.asarray(state.resident)[:, 1], initially)
