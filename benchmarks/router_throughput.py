@@ -1,18 +1,26 @@
-"""Router throughput: scalar reference loop vs jitted batched dispatch.
+"""Router throughput: scalar loop vs jitted scan vs chunked two-phase.
 
 Measures requests/sec for the scalar ``ModelAwareRouter`` (one Python
-call per request) against ``core.batch_router.route_batch`` (the whole
-batch in one jitted ``lax.scan``) across fleet sizes N in {4, 16, 64}
-and batch sizes B in {64, 1024, 4096}, verifying on every cell that the
-two paths agree on all routing choices.
+call per request), ``core.batch_router.route_batch`` with the
+single-scan path (the PR 2 baseline), and the chunked two-phase commit
+(``chunk=256``: one fused scoring call per chunk + the slimmed
+correction scan) across fleet sizes N in {4, 16, 64} and batch sizes B
+in {64, 1024, 4096}, verifying on every cell that all paths agree on
+all routing choices.
 
     PYTHONPATH=src python -m benchmarks.router_throughput
 
-CSV convention: ``name,us_per_call,derived`` (us per ROUTED REQUEST).
+prints the CSV sweep (``name,us_per_call,derived``, us per ROUTED
+REQUEST) and rewrites ``benchmarks/BENCH_router.json`` — the recorded
+perf trajectory: req/s for the scalar / scan / chunked paths at the
+acceptance shape N=64, B=4096 plus the chunked speedup over the scan
+path (the PR 3 target is >= 2x).
 """
 from __future__ import annotations
 
 import copy
+import json
+import pathlib
 import time
 
 import jax
@@ -25,7 +33,10 @@ from repro.core.router import EdgeServer, ModelAwareRouter, Request
 
 FLEET_SIZES = (4, 16, 64)
 BATCH_SIZES = (64, 1024, 4096)
+CHUNK = 256           # two-phase commit chunk at fleet scale
 EDGE_ARCHS = ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
+JSON_PATH = pathlib.Path(__file__).parent / "BENCH_router.json"
+ACCEPTANCE = (64, 4096)  # (N, B) cell recorded in BENCH_router.json
 
 
 def make_fleet(rng, n_servers, catalog, cache_slots=2):
@@ -60,54 +71,90 @@ def time_scalar(servers, catalog, models, bits, toks):
     return time.perf_counter() - t0, np.array(choices)
 
 
-def time_batched(servers, catalog, models, bits, toks, repeats=3):
+def time_batched(servers, catalog, models, bits, toks, repeats=7, **route_kw):
     params, state = br.fleet_from_servers(servers, catalog)
     reqs = br.RequestBatch(
         model=jnp.asarray(models, jnp.int32),
         prompt_bits=jnp.asarray(bits, jnp.float32),
         gen_tokens=jnp.asarray(toks, jnp.float32),
     )
-    _, out = br.route_batch(params, state, reqs)  # compile
+    _, out = br.route_batch(params, state, reqs, **route_kw)  # compile
     jax.block_until_ready(out.choice)
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
-        _, out = br.route_batch(params, state, reqs)
+        _, out = br.route_batch(params, state, reqs, **route_kw)
         jax.block_until_ready(out.choice)
         best = min(best, time.perf_counter() - t0)
     return best, np.asarray(out.choice)
 
 
-def run_cell(n_servers, n_requests, seed=0):
+def run_cell(n_servers, n_requests, seed=0, chunk=CHUNK):
     catalog = build_catalog(EDGE_ARCHS)
     rng = np.random.default_rng(seed)
     servers = make_fleet(rng, n_servers, catalog)
     models, bits, toks = make_stream(rng, n_requests, len(catalog))
     t_scalar, c_scalar = time_scalar(servers, catalog, models, bits, toks)
-    t_batch, c_batch = time_batched(servers, catalog, models, bits, toks)
-    assert np.array_equal(c_scalar, c_batch), (
-        f"batched router diverged from scalar oracle at N={n_servers} "
+    t_scan, c_scan = time_batched(servers, catalog, models, bits, toks)
+    t_chunked, c_chunked = time_batched(
+        servers, catalog, models, bits, toks, chunk=chunk
+    )
+    assert np.array_equal(c_scalar, c_scan), (
+        f"scan router diverged from scalar oracle at N={n_servers} "
         f"B={n_requests}"
     )
-    return t_scalar, t_batch
+    assert np.array_equal(c_scalar, c_chunked), (
+        f"chunked router diverged from scalar oracle at N={n_servers} "
+        f"B={n_requests}"
+    )
+    return t_scalar, t_scan, t_chunked
 
 
-def main(fleet_sizes=FLEET_SIZES, batch_sizes=BATCH_SIZES, header=True):
+def write_json(cells):
+    """Record the perf trajectory (req/s per path) for the acceptance
+    cell; cells: {(n, b): (t_scalar, t_scan, t_chunked)}."""
+    n, b = ACCEPTANCE
+    t_scalar, t_scan, t_chunked = cells[(n, b)]
+    payload = {
+        "shape": {"servers": n, "requests": b, "chunk": CHUNK},
+        "req_per_s": {
+            "scalar": round(b / t_scalar),
+            "scan": round(b / t_scan),
+            "chunked": round(b / t_chunked),
+        },
+        "chunked_speedup_over_scan": round(t_scan / t_chunked, 2),
+        "verified": "all paths agree with the scalar oracle on every choice",
+    }
+    JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+def main(fleet_sizes=FLEET_SIZES, batch_sizes=BATCH_SIZES, header=True,
+         emit_json=True):
     if header:  # run.py already printed the combined-stream header
         print("name,us_per_call,derived")
+    cells = {}
     for n in fleet_sizes:
         for b in batch_sizes:
-            t_scalar, t_batch = run_cell(n, b)
-            us_s = t_scalar / b * 1e6
-            us_b = t_batch / b * 1e6
+            t_scalar, t_scan, t_chunked = run_cell(n, b)
+            cells[(n, b)] = (t_scalar, t_scan, t_chunked)
             print(
-                f"router_scalar_n{n}_b{b},{us_s:.2f},"
+                f"router_scalar_n{n}_b{b},{t_scalar / b * 1e6:.2f},"
                 f"req_per_s={b / t_scalar:.0f}"
             )
             print(
-                f"router_batched_n{n}_b{b},{us_b:.2f},"
-                f"req_per_s={b / t_batch:.0f};speedup={t_scalar / t_batch:.1f}x"
+                f"router_scan_n{n}_b{b},{t_scan / b * 1e6:.2f},"
+                f"req_per_s={b / t_scan:.0f};speedup={t_scalar / t_scan:.1f}x"
             )
+            print(
+                f"router_chunked_n{n}_b{b},{t_chunked / b * 1e6:.2f},"
+                f"req_per_s={b / t_chunked:.0f}"
+                f";speedup_vs_scan={t_scan / t_chunked:.2f}x"
+            )
+    if emit_json and ACCEPTANCE in cells:
+        payload = write_json(cells)
+        print(f"wrote {JSON_PATH.name}: {payload['req_per_s']} "
+              f"(chunked/scan = {payload['chunked_speedup_over_scan']}x)")
 
 
 if __name__ == "__main__":

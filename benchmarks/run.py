@@ -90,13 +90,22 @@ def bench_kernels():
 
 
 def bench_router():
-    """Fleet-scale request routing: scalar oracle vs jitted batched scan."""
+    """Fleet-scale routing: scalar oracle vs jitted scan vs chunked
+    two-phase commit (incl. the N=64 B=4096 acceptance cell, which
+    refreshes benchmarks/BENCH_router.json)."""
     from benchmarks import router_throughput
 
     # one representative cell per size regime; the full sweep is
     # ``python -m benchmarks.router_throughput``
-    router_throughput.main(fleet_sizes=(16, 64), batch_sizes=(1024,),
+    router_throughput.main(fleet_sizes=(16, 64), batch_sizes=(1024, 4096),
                            header=False)
+
+
+def bench_score_kernel():
+    """Fused (B, N) eq. 11 score contraction (chunked phase 1)."""
+    from benchmarks import score_kernel
+
+    score_kernel.main(shapes=((4096, 64),), header=False)
 
 
 def bench_multicell():
@@ -173,6 +182,7 @@ def main() -> None:
     bench_env_step()
     bench_maddpg_update()
     bench_kernels()
+    bench_score_kernel()
     bench_router()
     bench_multicell()
     bench_train_step()

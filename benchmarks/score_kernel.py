@@ -1,0 +1,85 @@
+"""Fused (B, N) routing-score contraction microbenchmark.
+
+Times the eq. 11 score matrix (``core.batch_router.score_matrix``) on
+the XLA backend across fleet/batch shapes — the contraction the chunked
+``route_batch`` calls once per chunk — and validates the Pallas kernel
+against it in interpret mode (interpret emulation is not a meaningful
+timing target on CPU; on TPU the kernel path is the one to time).
+
+    PYTHONPATH=src python -m benchmarks.score_kernel
+
+CSV convention: ``name,us_per_call,derived`` (pair-scores per second).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch_router as br
+from repro.core.catalog import build_catalog
+from repro.launch.serve import make_multicell_fleet
+
+EDGE_ARCHS = ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
+SHAPES = ((1024, 16), (4096, 64), (16384, 64))  # (B, N-ish) sweep
+
+
+def make_case(rng, n_requests, n_cells, servers_per_cell):
+    catalog = build_catalog(EDGE_ARCHS)
+    fleet = make_multicell_fleet(n_cells, servers_per_cell, catalog)
+    params, state = br.fleet_from_servers(fleet, catalog)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(rng.integers(0, len(catalog), n_requests),
+                          jnp.int32),
+        prompt_bits=jnp.asarray(rng.uniform(1e5, 1e6, n_requests),
+                                jnp.float32),
+        gen_tokens=jnp.asarray(rng.integers(1, 32, n_requests), jnp.float32),
+        cell=jnp.asarray(rng.integers(0, n_cells, n_requests), jnp.int32),
+    )
+    return params, state, reqs
+
+
+def time_backend(params, state, reqs, backend, repeats=5):
+    fn = jax.jit(
+        lambda p, s, r: br.score_matrix(p, s, r, backend=backend)
+    )
+    out = fn(params, state, reqs)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(params, state, reqs))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(shapes=SHAPES, header=True):
+    if header:
+        print("name,us_per_call,derived")
+    rng = np.random.default_rng(0)
+
+    # interpret-mode kernel validation on a small cell (not a timing)
+    params, state, reqs = make_case(rng, 256, 2, 4)
+    xla = np.asarray(br.score_matrix(params, state, reqs, backend="xla"))
+    pal = np.asarray(
+        br.score_matrix(params, state, reqs, backend="pallas-interpret")
+    )
+    np.testing.assert_allclose(pal, xla, rtol=1e-5)
+    assert np.array_equal(np.isinf(pal), np.isinf(xla))
+    print("score_kernel_interpret_b256_n9,validated,allclose=1e-5")
+
+    for b, n_total in shapes:
+        n_cells = max(1, n_total // 16)
+        params, state, reqs = make_case(rng, b, n_cells, 16)
+        n = params.flops_per_s.shape[0]
+        t = time_backend(params, state, reqs, "xla")
+        print(
+            f"score_xla_b{b}_n{n},{t * 1e6:.1f},"
+            f"pair_scores_per_s={b * n / t:.2e}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -10,20 +10,43 @@ Design
 * **Array-resident fleet state** (``FleetState``): residency masks and
   LRU clocks as ``(N, K)`` arrays, queue depths as ``(N,)`` — no Python
   objects survive into the hot path.
-* **Vectorised scoring kernel** (``score_matrix``): the paper's cost
-  terms — transmission (eq. 5), model switch (eq. 7), FIFO-fair compute
-  (eq. 9) — evaluated for ALL request x server pairs at once as a
-  ``(B, N)`` matrix, sharing ``core.costs`` with the environment.
+* **Fused scoring kernel** (``score_matrix``): the paper's cost terms —
+  transmission (eq. 5), model switch (eq. 7), FIFO-fair compute (eq. 9)
+  — evaluated for ALL request x server pairs at once as a ``(B, N)``
+  matrix. The arithmetic lives in ``core.costs.edge_score_matrix``; the
+  contraction dispatches through ``kernels.ops.route_score`` to either
+  the XLA reference (``backend="xla"``) or the tiled Pallas kernel
+  (``kernels/route_score.py``, ``backend="pallas"`` /
+  ``"pallas-interpret"``). ``backend=None`` reads the
+  ``REPRO_ROUTER_BACKEND`` env knob (default ``"xla"``).
 * **Sequential-commit semantics** (``route_batch``): requests within a
   batch still contend for queues and caches, so commits are applied in
   arrival order by a ``lax.scan`` whose per-step work is vectorised over
-  the fleet. The request-independent cost terms (transmission, switch
-  price) come from the precomputed matrix; only the state-dependent
-  residency gate and queue backlog are evaluated inside the scan. This
-  reproduces the scalar router *exactly* — including LRU tie-breaking,
-  which is preserved by encoding each initial resident's list position
-  as a distinct negative clock (the scalar oracle breaks last-use ties
-  by list order).
+  the fleet. This reproduces the scalar router *exactly* — including
+  LRU tie-breaking, which is preserved by encoding each initial
+  resident's list position as a distinct negative clock (the scalar
+  oracle breaks last-use ties by list order).
+* **Chunked two-phase commit** (``route_batch(..., chunk=c)``): the
+  serial region shrinks from B full scoring steps to B cheap correction
+  steps. Phase 1 scores a whole chunk of ``c`` requests with one fused
+  kernel call — the *switch-free base* ``t_trans + work/flops`` plus
+  the cell mask, all state-independent. Phase 2 is a slimmed scan that
+  only re-derives the state-dependent residue per step, from two
+  per-request SCALARS (the model's size and FLOPs/token) against
+  per-server constants:
+
+      lats = base + where(resident[:, model], 0, size/backhaul)
+                  + (queue * flops_tok)/flops
+
+  i.e. the residency gate, the queue-backlog drift and the wall-clock
+  drain — one fused elementwise chain; no transmission term, no cell
+  compare, and no per-step (B, N) rows beyond the base left in the
+  serial region. Integer decisions (choices, LRU
+  evictions, residency, queues, fleet clock) stay bit-identical to the
+  scalar oracle; reported latencies agree to a few ulps (the re-
+  association of eq. 9 — ``q*ftok/f + w/f`` vs ``(q*ftok + w)/f`` —
+  rounds differently). ``chunk=None`` (default) keeps the single-scan
+  path whose latencies are bit-exact against the oracle.
 * **Pluggable policies**: ``greedy`` (argmin of the eq. 11 latency),
   ``actor`` (a trained MADDPG actor called with the same observation
   layout the scalar router exposes), ``load`` (least-loaded server,
@@ -53,22 +76,38 @@ tracks wall clock rather than request count. ``drain_rate == 0`` (or
 ``arrival_s=None``) reproduces the synchronous behaviour exactly; the
 legacy per-request ``drain_tokens`` argument is still honoured.
 
-Follow-ons tracked in ROADMAP: a Pallas scoring kernel once N x K
-residency rows stop fitting VMEM-friendly tiles, and trained-actor
-serving through ``launch/serve.py``.
+Follow-on tracked in ROADMAP: trained-actor serving through
+``launch/serve.py``.
 """
 from __future__ import annotations
 
 import functools
+import os
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import costs
 from repro.core.router import CLOUD_CELL
+from repro.kernels import ops
 
 _NEVER_USED = -(2**30)  # last-use clock for models that are not resident
+
+#: Env knob for the scoring backend: "xla" | "pallas" | "pallas-interpret".
+BACKEND_ENV = "REPRO_ROUTER_BACKEND"
+_BACKENDS = ("xla", "pallas", "pallas-interpret")
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """``None`` -> ``$REPRO_ROUTER_BACKEND`` (default ``"xla"``)."""
+    backend = backend or os.environ.get(BACKEND_ENV, "xla")
+    if backend not in _BACKENDS:
+        raise ValueError(
+            f"unknown router backend {backend!r}; expected one of {_BACKENDS}"
+        )
+    return backend
 
 
 class FleetParams(NamedTuple):
@@ -120,8 +159,6 @@ class RouteOutcome(NamedTuple):
 # ---------------------------------------------------------------------------
 def make_fleet_params(servers, catalog) -> FleetParams:
     """Build array fleet params from ``EdgeServer``s + ``CatalogEntry``s."""
-    import numpy as np
-
     entries = sorted(catalog, key=lambda e: e.index)
     return FleetParams(
         flops_per_s=jnp.asarray(np.array([s.flops_per_s for s in servers])),
@@ -151,8 +188,6 @@ def make_fleet_state(servers, num_models: int, clock: int = 0,
     ``last_use == -1``) by position in the ``resident`` list; we encode
     position ``i`` of a list of length L as clock ``i - L`` so ties become
     a strict order that an argmin resolves identically."""
-    import numpy as np
-
     n = len(servers)
     resident = np.zeros((n, num_models), bool)
     last_use = np.full((n, num_models), _NEVER_USED, np.int32)
@@ -218,29 +253,34 @@ def cell_mask(params: FleetParams, reqs: RequestBatch):
     )
 
 
-def score_matrix(params: FleetParams, state: FleetState, reqs: RequestBatch):
+def score_matrix(params: FleetParams, state: FleetState, reqs: RequestBatch,
+                 *, backend: Optional[str] = None):
     """Full (B, N) eq. 11 cost matrix against the CURRENT fleet state.
 
     One shot over all request x server pairs: eq. 5 transmission +
     eq. 7 switch (gated on residency) + eq. 9 compute against the
     present queue backlog. Out-of-cell pairs score ``+inf`` when the
     batch carries cell ids (block-diagonal mask + cloud column).
-    ``route_batch`` shares the state-independent pieces
-    (``_static_costs``) and re-derives the state-dependent ones step by
-    step; this entry point is the one-shot view (policy studies,
-    admission control, and the planned Pallas kernel target exactly this
-    contraction)."""
-    t_trans, switch_price, flops_tok = _static_costs(params, reqs)
-    resident = state.resident[:, reqs.model].T            # (B, N)
-    t_switch = jnp.where(resident, 0.0, switch_price)
-    backlog = state.queue_tokens[None, :] * flops_tok[:, None]
-    work = (reqs.gen_tokens * flops_tok)[:, None]
-    t_comp = (backlog + work) / params.flops_per_s[None, :]
-    score = t_trans + t_switch + t_comp
-    visible = cell_mask(params, reqs)
-    if visible is not None:
-        score = jnp.where(visible, score, jnp.inf)
-    return score
+
+    ``backend`` picks the contraction: ``"xla"`` (the reference path,
+    arithmetic in ``costs.edge_score_matrix``) or ``"pallas"`` /
+    ``"pallas-interpret"`` (the fused ``kernels/route_score.py`` tile
+    kernel). ``None`` reads ``$REPRO_ROUTER_BACKEND``. Policy studies,
+    admission control, and ``route_batch``'s chunked phase-1 all target
+    exactly this contraction."""
+    backend = resolve_backend(backend)
+    flops_tok = params.decode_flops_per_token[reqs.model]
+    has_cells = params.cell is not None and reqs.cell is not None
+    return ops.route_score(
+        reqs.prompt_bits, params.size_bits[reqs.model], flops_tok,
+        reqs.gen_tokens * flops_tok,
+        params.uplink_bps, params.backhaul_bps, params.flops_per_s,
+        queue_tokens=state.queue_tokens, resident=state.resident,
+        model=reqs.model,
+        req_cell=reqs.cell if has_cells else None,
+        srv_cell=params.cell if has_cells else None,
+        cloud_cell=CLOUD_CELL, backend=backend,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -283,7 +323,39 @@ def _resolve_policy(policy, actor):
 # ---------------------------------------------------------------------------
 # batched routing with sequential-commit semantics
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("policy", "actor"))
+def _commit(params, resident, last_use, queue, clock, model, gen_b, choice,
+            lats, ok):
+    """LRU residency + queue commit for one routed request, mirroring the
+    scalar oracle. ``ok=None`` commits unconditionally (the single-cell
+    un-padded fast path); a boolean ``ok`` gates every mutation — False
+    leaves the fleet untouched and reports a rejection (choice -1)."""
+    row = resident[choice]
+    was_resident = row[model]
+    full = row.sum() >= params.cache_slots[choice]
+    evict_idx = jnp.argmin(
+        jnp.where(row, last_use[choice], jnp.iinfo(jnp.int32).max)
+    )
+    if ok is None:
+        evict = ~was_resident & full
+        row = row.at[evict_idx].set(row[evict_idx] & ~evict)
+        row = row.at[model].set(True)
+        resident = resident.at[choice].set(row)
+        last_use = last_use.at[choice, model].set(clock)
+        queue = queue.at[choice].add(gen_b)
+        out = (choice, lats[choice], was_resident)
+    else:
+        evict = ~was_resident & full & ok
+        row = row.at[evict_idx].set(row[evict_idx] & ~evict)
+        row = row.at[model].set(row[model] | ok)
+        resident = resident.at[choice].set(row)
+        last_use = last_use.at[choice, model].set(
+            jnp.where(ok, clock, last_use[choice, model])
+        )
+        queue = queue.at[choice].add(jnp.where(ok, gen_b, 0.0))
+        out = (jnp.where(ok, choice, -1), lats[choice], was_resident & ok)
+    return resident, last_use, queue, out
+
+
 def route_batch(
     params: FleetParams,
     state: FleetState,
@@ -292,8 +364,12 @@ def route_batch(
     *,
     policy="greedy",
     actor=None,
+    chunk: Optional[int] = None,
+    unroll: int = 8,
+    backend: Optional[str] = None,
 ):
-    """Route a whole request batch in one call; returns (state, outcome).
+    """Route a whole request batch in one jitted call; returns
+    ``(state, outcome)``.
 
     Requests commit in arrival order (queue growth, LRU insert/evict)
     exactly like B sequential ``ModelAwareRouter.route`` calls, each
@@ -309,14 +385,34 @@ def route_batch(
         before a request is scored, every queue decays by
         ``drain_rate * dt`` where ``dt`` is the wall-clock gap since the
         carry clock ``state.time_s`` last advanced.
+
+    Performance knobs (all static — each combination compiles once):
+      * ``chunk`` — two-phase commit: score ``chunk`` requests per fused
+        kernel call, then run the slimmed correction scan (see module
+        docstring). ``None`` keeps the one-scan path whose latencies are
+        bit-exact against the oracle; integer decisions and fleet state
+        are identical either way. Batches that don't divide evenly are
+        padded with inert requests that never touch the fleet.
+      * ``unroll`` — lax.scan unroll factor for the sequential region.
+      * ``backend`` — scoring backend for the chunked phase-1 / the
+        fused kernel (``"xla"`` | ``"pallas"`` | ``"pallas-interpret"``;
+        ``None`` reads ``$REPRO_ROUTER_BACKEND``).
     """
+    backend = resolve_backend(backend)  # env read stays outside the jit cache
+    return _route_batch(params, state, reqs, drain_tokens, policy=policy,
+                        actor=actor, chunk=chunk, unroll=unroll,
+                        backend=backend)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("policy", "actor", "chunk", "unroll", "backend")
+)
+def _route_batch(params, state, reqs, drain_tokens, *, policy, actor, chunk,
+                 unroll, backend):
     policy_fn = _resolve_policy(policy, actor)
     dtype = jnp.result_type(reqs.prompt_bits, params.uplink_bps)
 
-    # state-independent cost pieces, vectorised over the full batch
-    t_trans, switch_price, flops_tok = _static_costs(params, reqs)
     gen_tokens = reqs.gen_tokens.astype(dtype)                  # (B,)
-    work = gen_tokens * flops_tok                               # (B,)
     drain = (
         None
         if drain_tokens is None
@@ -328,7 +424,34 @@ def route_batch(
     drain_rate = params.drain_rate.astype(dtype) if has_time else None
     arrivals = reqs.arrival_s.astype(dtype) if has_time else None
     time0 = state.time_s if state.time_s is not None else 0.0
-    queue0 = state.queue_tokens.astype(dtype)
+    carry = (state.resident, state.last_use,
+             state.queue_tokens.astype(dtype), state.clock,
+             jnp.asarray(time0, dtype))
+
+    if chunk is None:
+        carry, outs = _scan_full(params, reqs, carry, policy_fn, dtype,
+                                 gen_tokens, drain, drain_rate, arrivals,
+                                 has_cells, has_time, unroll)
+    else:
+        carry, outs = _scan_chunked(params, reqs, carry, policy_fn, dtype,
+                                    gen_tokens, drain, drain_rate, arrivals,
+                                    has_cells, has_time, chunk, unroll,
+                                    backend)
+    resident, last_use, queue, clock, time_s = carry
+    choice, latency, hit = outs
+    new_state = FleetState(
+        resident=resident, last_use=last_use, queue_tokens=queue, clock=clock,
+        time_s=time_s,
+    )
+    return new_state, RouteOutcome(choice=choice, latency=latency, hit=hit)
+
+
+def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
+               drain_rate, arrivals, has_cells, has_time, unroll):
+    """Single-scan path: full eq. 11 re-derivation per step (bit-exact
+    latencies vs the scalar oracle — same term order, same rounding)."""
+    t_trans, switch_price, flops_tok = _static_costs(params, reqs)
+    work = gen_tokens * flops_tok                               # (B,)
 
     def step(carry, xs):
         resident, last_use, queue, clock, time_s = carry
@@ -365,55 +488,262 @@ def route_batch(
             choice = jnp.where(visible[choice], choice,
                                jnp.argmin(lats).astype(jnp.int32))
 
-        # commit: LRU residency + queue, mirroring the scalar oracle
-        row = resident[choice]
-        was_resident = row[model]
-        full = row.sum() >= params.cache_slots[choice]
-        evict_idx = jnp.argmin(
-            jnp.where(row, last_use[choice], jnp.iinfo(jnp.int32).max)
+        # a cell with no members and no cloud column leaves every
+        # candidate at inf: reject (choice -1) without committing
+        ok = jnp.isfinite(lats[choice]) if has_cells else None
+        resident, last_use, queue, out = _commit(
+            params, resident, last_use, queue, clock, model, gen_b, choice,
+            lats, ok,
         )
-        evict = ~was_resident & full
-        if has_cells:
-            # a cell with no members and no cloud column leaves every
-            # candidate at inf: reject (choice -1) without committing
-            ok = jnp.isfinite(lats[choice])
-            evict &= ok
-            row = row.at[evict_idx].set(row[evict_idx] & ~evict)
-            row = row.at[model].set(row[model] | ok)
-            resident = resident.at[choice].set(row)
-            last_use = last_use.at[choice, model].set(
-                jnp.where(ok, clock, last_use[choice, model])
-            )
-            queue = queue.at[choice].add(jnp.where(ok, gen_b, 0.0))
-            out = (jnp.where(ok, choice, -1), lats[choice],
-                   was_resident & ok)
-        else:
-            row = row.at[evict_idx].set(row[evict_idx] & ~evict)
-            row = row.at[model].set(True)
-            resident = resident.at[choice].set(row)
-            last_use = last_use.at[choice, model].set(clock)
-            queue = queue.at[choice].add(gen_b)
-            out = (choice, lats[choice], was_resident)
         if drain_b is not None:  # None is static: compiled out of the scan
             queue = jnp.maximum(queue - drain_b, 0.0)
         return (resident, last_use, queue, clock, time_s), out
 
-    carry = (state.resident, state.last_use, queue0, state.clock,
-             jnp.asarray(time0, dtype))
     xs = (reqs.model, t_trans, switch_price, flops_tok, work, drain,
           gen_tokens, reqs.cell if has_cells else None, arrivals)
-    ((resident, last_use, queue, clock, time_s),
-     (choice, latency, hit)) = jax.lax.scan(step, carry, xs, unroll=8)
-    new_state = FleetState(
-        resident=resident, last_use=last_use, queue_tokens=queue, clock=clock,
-        time_s=time_s,
-    )
-    return new_state, RouteOutcome(choice=choice, latency=latency, hit=hit)
+    return jax.lax.scan(step, carry, xs, unroll=unroll)
+
+
+_LRU_FREE = jnp.iinfo(jnp.int32).max  # lru_key for a non-resident slot
+
+
+def _static_argmin(col, k):
+    """First-min argmin over the leading ``k`` scalars of ``col``,
+    unrolled as a select tournament (k is tiny and static: the model
+    catalogue). Ties break to the LOWEST index, exactly like
+    ``jnp.argmin`` and the scalar oracle's list-order scan — the left
+    operand wins every ``<=`` and lower indices always sit left."""
+    vals = [col[i] for i in range(k)]
+    idxs = [jnp.int32(i) for i in range(k)]
+    while len(vals) > 1:
+        nxt_v, nxt_i = [], []
+        for i in range(0, len(vals) - 1, 2):
+            left = vals[i] <= vals[i + 1]
+            nxt_v.append(jnp.where(left, vals[i], vals[i + 1]))
+            nxt_i.append(jnp.where(left, idxs[i], idxs[i + 1]))
+        if len(vals) % 2:
+            nxt_v.append(vals[-1])
+            nxt_i.append(idxs[-1])
+        vals, idxs = nxt_v, nxt_i
+    return idxs[0]
+
+
+def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
+                  drain_rate, arrivals, has_cells, has_time, chunk, unroll,
+                  backend):
+    """Two-phase commit: fused chunk scoring + slimmed correction scan.
+
+    The serial region also runs on a denser state encoding than the
+    public ``FleetState`` (converted at entry/exit):
+
+      * ``lru_ext`` — residency, LRU clocks AND spare-slot counts
+        collapsed into ONE transposed (K+1, N) int32 array: rows
+        ``0..K-1`` hold ``where(resident, last_use, INT32_MAX)``, row
+        ``K`` the free cache slots. Residency becomes a compare, the
+        eq. 7 gate reads one CONTIGUOUS row per step (the model axis is
+        major), and a single column slice at the chosen server yields
+        the hit bit, the eviction candidates and the capacity check in
+        one read. The LRU victim is a first-min select tournament down
+        the column — non-residents sort last automatically, and ties
+        still break by model index exactly like the scalar oracle's
+        list order.
+      * the commit is a dense one-hot ``where`` over (K+1, N) — no
+        scatter in the loop body at all — and the three per-step
+        outputs ride in ONE stacked (3,) vector so the scan performs a
+        single output write per request.
+
+    ``last_use`` entries of models that leave residency mid-batch come
+    back as their pre-batch values (the single-scan path keeps the
+    eviction-time clock); those entries are dead state — the oracle
+    never reads a non-resident clock."""
+    b = reqs.model.shape[0]
+    n = params.flops_per_s.shape[0]
+    c = max(1, min(int(chunk), b))
+    n_chunks = -(-b // c)
+    pad = n_chunks * c - b
+
+    def pad1(x):
+        return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)) if pad else x
+
+    model = pad1(reqs.model)
+    prompt = pad1(reqs.prompt_bits.astype(dtype))
+    gen = pad1(gen_tokens)
+    flops_tok = params.decode_flops_per_token[model]
+    size_bits = params.size_bits[model]
+    work = gen * flops_tok
+    cells = pad1(reqs.cell) if has_cells else None
+    arrs = pad1(arrivals) if has_time else None
+    drains = pad1(drain) if drain is not None else None
+    # padded tail requests are inert: no commit, no clock/time advance
+    valid = (jnp.arange(n_chunks * c) < b) if pad else None
+    needs_obs = getattr(policy_fn, "needs_obs", True)
+    # the builtin argmins can only land on an invisible server when the
+    # whole row is +inf (-> rejected either way), so the out-of-cell
+    # clamp is skipped for them; every other policy gets clamped,
+    # matching the single-scan path decision for decision
+    needs_clamp = policy_fn not in (_greedy_policy, _load_policy)
+    iota_n = jnp.arange(n, dtype=jnp.int32)
+    num_k = params.size_bits.shape[0]
+    iota_k = jnp.arange(num_k + 1, dtype=jnp.int32)  # +1: free-slot row
+
+    resident0, last_use0, queue, clock, time_s = carry
+    free = (params.cache_slots
+            - resident0.sum(axis=1).astype(jnp.int32))       # (N,)
+    lru = jnp.concatenate(
+        [jnp.where(resident0, last_use0, _LRU_FREE).T, free[None, :]]
+    )                                                        # (K+1, N)
+    carry = (lru, queue, clock, time_s)
+
+    def chunks(x):
+        return (
+            None if x is None else x.reshape((n_chunks, c) + x.shape[1:])
+        )
+
+    def step(carry, xs):
+        lru, queue, clock, time_s = carry
+        model_b, scal_b, drain_b, arrival_b, valid_b, base_b = xs
+        gen_b, size_b, ftok_b = scal_b[0], scal_b[1], scal_b[2]
+
+        if has_time:  # wall-clock residue: queue decay since last arrival
+            dt = jnp.maximum(arrival_b - time_s, 0.0)
+            if valid_b is not None:
+                dt = jnp.where(valid_b, dt, 0.0)
+                time_s = jnp.where(valid_b,
+                                   jnp.maximum(time_s, arrival_b), time_s)
+            else:
+                time_s = jnp.maximum(time_s, arrival_b)
+            queue = jnp.maximum(queue - drain_rate * dt, 0.0)
+        clock = clock + (1 if valid_b is None
+                         else valid_b.astype(clock.dtype))
+
+        # state-dependent residue only: residency-gated switch (eq. 7)
+        # + queue-backlog drift (eq. 9) on top of the precomputed
+        # switch-free base (phase 1). Both residue terms are scalar x
+        # (N,)-constant expressions, so the whole chain fuses into one
+        # elementwise kernel — no per-step (N,) input rows beyond base.
+        rm_key = jax.lax.dynamic_slice(
+            lru, (model_b, jnp.int32(0)), (1, n)
+        )[0]
+        resident_m = rm_key < _LRU_FREE                         # (N,)
+        lats = (
+            base_b
+            + jnp.where(resident_m, 0.0, size_b / params.backhaul_bps)
+        ) + (queue * ftok_b) / params.flops_per_s
+
+        if needs_obs:
+            obs = jnp.stack(
+                [resident_m.astype(dtype), queue, params.flops_per_s], axis=-1
+            ).reshape(-1)
+        else:
+            obs = None
+        queue_vis = queue
+        if has_cells:
+            # visibility is already folded into base as +inf; XLA DCEs
+            # this for policies that never read the queue (greedy)
+            queue_vis = jnp.where(jnp.isfinite(base_b), queue, jnp.inf)
+        choice = jnp.asarray(policy_fn(lats, obs, queue_vis), jnp.int32)
+        if has_cells and needs_clamp:
+            # an actor may ignore the inf-masked inputs; never commit an
+            # out-of-cell choice — fall back to the masked greedy argmin
+            choice = jnp.where(jnp.isfinite(base_b[choice]), choice,
+                               jnp.argmin(lats).astype(jnp.int32))
+
+        lat_b = lats[choice]
+        ok = jnp.isfinite(lat_b) if has_cells else None
+        if valid_b is not None:
+            ok = valid_b if ok is None else ok & valid_b
+
+        # dense one-hot commit on the (K+1, N) lru encoding: ONE column
+        # slice yields hit bit, eviction candidates and capacity check
+        lru_col = jax.lax.dynamic_slice(
+            lru, (jnp.int32(0), choice), (num_k + 1, 1)
+        )[:, 0]
+        was_resident = lru_col[model_b] < _LRU_FREE
+        evict_idx = _static_argmin(lru_col, num_k)
+        full = lru_col[num_k] <= 0                              # free slots
+        evict = ~was_resident & full
+        touch_n = iota_n == choice                              # (N,)
+        if ok is None:
+            out_choice, hit = choice, was_resident
+        else:
+            evict &= ok
+            touch_n &= ok
+            out_choice, hit = jnp.where(ok, choice, -1), was_resident & ok
+        # one stacked output vector -> one scan write per request
+        out = jnp.stack([out_choice.astype(dtype), lat_b,
+                         hit.astype(dtype)])
+        taken = (~was_resident).astype(jnp.int32) - evict.astype(jnp.int32)
+        pair_set = (iota_k == model_b)[:, None] & touch_n[None, :]
+        pair_evict = ((iota_k == evict_idx) & evict)[:, None] & touch_n[None, :]
+        pair_free = (iota_k == num_k)[:, None] & touch_n[None, :]
+        lru = jnp.where(
+            pair_set, clock,
+            jnp.where(pair_evict, _LRU_FREE,
+                      lru - jnp.where(pair_free, taken, 0)),
+        )
+        queue = queue + jnp.where(touch_n, gen_b, 0.0)
+        if drain_b is not None:
+            d = drain_b if valid_b is None else jnp.where(valid_b, drain_b,
+                                                          0.0)
+            queue = jnp.maximum(queue - d, 0.0)
+        return (lru, queue, clock, time_s), out
+
+    def chunk_step(carry, xs):
+        model_c, scal_c, prompt_c, work_c, drain_c, cell_c, arr_c, \
+            valid_c = xs
+        # phase 1 — ONE fused kernel call scores the whole chunk: the
+        # switch-free base (eq. 5 + zero-backlog eq. 9) with the cell
+        # mask folded in as +inf. Everything here is state-independent;
+        # the switch price stays OUT of the base because re-subtracting
+        # it on residency would cancel catastrophically (the download
+        # price dwarfs the served latencies) — the scan re-gates it.
+        base = ops.route_score(
+            prompt_c, None, scal_c[:, 2], work_c,
+            params.uplink_bps, params.backhaul_bps, params.flops_per_s,
+            req_cell=cell_c,
+            srv_cell=params.cell if has_cells else None,
+            cloud_cell=CLOUD_CELL, backend=backend,
+        )                                                       # (c, N)
+        inner = (model_c, scal_c, drain_c, arr_c, valid_c, base)
+        return jax.lax.scan(step, carry, inner, unroll=min(unroll, c))
+
+    # (c, 3) strip of per-request scalars: one xs slice per step
+    scalars = jnp.stack([gen, size_bits, flops_tok], axis=1)
+    xs = tuple(map(chunks, (model, scalars, prompt, work,
+                            drains, cells, arrs, valid)))
+    carry, outs = jax.lax.scan(chunk_step, carry, xs)
+    lru, queue, clock, time_s = carry
+    lru = lru[:num_k]                                        # drop free row
+    resident = (lru < _LRU_FREE).T
+    # non-resident clocks are dead state; restore pre-batch values so a
+    # model that was evicted mid-batch doesn't surface a bogus clock
+    last_use = jnp.where(resident, lru.T, last_use0)
+    carry = (resident, last_use, queue, clock, time_s)
+    outs = outs.reshape(n_chunks * c, 3)[:b]                 # unpack
+    choice = outs[:, 0].astype(jnp.int32)
+    latency = outs[:, 1]
+    hit = outs[:, 2] != 0
+    return carry, (choice, latency, hit)
 
 
 def stats(outcome: RouteOutcome) -> dict:
-    """Fleet-level summary of one routed batch."""
+    """Fleet-level summary of one routed batch.
+
+    Rejected requests (``choice == -1``, ``inf`` latency) would poison
+    the latency mean, so they are masked out of ``mean_latency`` and
+    reported separately as ``completion_rate`` — the fraction of
+    requests that found a feasible server (the paper's third headline
+    metric alongside latency and hit rate).
+    """
+    ok = outcome.choice >= 0
+    n_ok = jnp.maximum(ok.sum(), 1)
+    mean_lat = jnp.where(
+        ok.any(),
+        jnp.where(ok, outcome.latency, 0.0).sum() / n_ok,
+        jnp.inf,
+    )
     return {
-        "mean_latency": float(outcome.latency.mean()),
+        "mean_latency": float(mean_lat),
         "residency_hit_rate": float(outcome.hit.mean()),
+        "completion_rate": float(ok.mean()),
     }

@@ -65,6 +65,42 @@ def edge_total_latency(t_trans, t_switch, t_comp):
     return t_trans + t_switch + t_comp
 
 
+def edge_score_matrix(prompt_bits, size_bits, flops_tok, work,
+                      uplink_bps, backhaul_bps, flops_per_s,
+                      queue_tokens=None, resident=None):
+    """Vectorised eq. 11 over ALL request x server pairs: the (B, N) score.
+
+    Per-request columns (B,): ``prompt_bits``, ``size_bits`` (the tagged
+    model's weights), ``flops_tok`` (decode FLOPs/token), ``work``
+    (``gen_tokens * flops_tok``). Per-server columns (N,): ``uplink_bps``,
+    ``backhaul_bps``, ``flops_per_s``, ``queue_tokens``. ``resident`` is
+    the (B, N) residency gate (model already cached -> no eq. 7 price).
+
+    ``resident=None`` leaves the switch price UNGATED; ``size_bits=None``
+    drops the eq. 7 term entirely and ``queue_tokens=None`` drops the
+    backlog term — the latter two yield the state-independent
+    "switch-free base" the chunked router adds its per-step residue to
+    (the gated switch must be re-applied in the scan: pre-adding it and
+    subtracting on residency would cancel catastrophically, since the
+    download price dwarfs the served latencies). This function is the
+    single home of the eq. 5 + 7 + 9 arithmetic: the XLA scoring path,
+    the Pallas kernel oracle and the batched router all call it (or
+    reproduce it term for term).
+    """
+    t_trans = trans_latency(prompt_bits[:, None], 1.0, uplink_bps[None, :])
+    if queue_tokens is None:
+        backlog = work[:, None]
+    else:
+        backlog = queue_tokens[None, :] * flops_tok[:, None] + work[:, None]
+    t_comp = backlog / flops_per_s[None, :]
+    if size_bits is None:
+        return t_trans + t_comp
+    t_switch = switch_latency(size_bits[:, None], backhaul_bps[None, :])
+    if resident is not None:
+        t_switch = jnp.where(resident, 0.0, t_switch)
+    return edge_total_latency(t_trans, t_switch, t_comp)
+
+
 def edge_total_energy(e_trans, e_switch, e_comp):
     return e_trans + e_switch + e_comp
 

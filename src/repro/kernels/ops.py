@@ -52,3 +52,35 @@ def ssd_decode(state, xt, dtt, a_log, bt, ct, d_skip, *, backend: str = "xla"):
     # single recurrent step is bandwidth-trivial; always the jnp path
     del backend
     return ref.ssd_decode_naive(state, xt, dtt, a_log, bt, ct, d_skip)
+
+
+def route_score(
+    prompt_bits, size_bits, flops_tok, work,
+    uplink_bps, backhaul_bps, flops_per_s,
+    queue_tokens=None, resident=None, model=None,
+    req_cell=None, srv_cell=None,
+    *, cloud_cell: int = -1, backend: str = "xla",
+):
+    """Fused (B, N) eq. 11 routing-score matrix (see ``route_score.py``).
+
+    Backends: ``"xla"`` (reference contraction), ``"pallas"`` (TPU
+    kernel; interpreted when this host is CPU-only), and
+    ``"pallas-interpret"`` (force interpret mode — the value the
+    ``REPRO_ROUTER_BACKEND`` env knob uses on CPU CI).
+    """
+    if backend in ("pallas", "pallas-interpret"):
+        from repro.kernels import route_score as _k
+
+        return _k.route_score(
+            prompt_bits, size_bits, flops_tok, work,
+            uplink_bps, backhaul_bps, flops_per_s,
+            queue_tokens=queue_tokens, resident=resident, model=model,
+            req_cell=req_cell, srv_cell=srv_cell, cloud_cell=cloud_cell,
+            interpret=_INTERPRET or backend == "pallas-interpret",
+        )
+    return ref.route_score_xla(
+        prompt_bits, size_bits, flops_tok, work,
+        uplink_bps, backhaul_bps, flops_per_s,
+        queue_tokens=queue_tokens, resident=resident, model=model,
+        req_cell=req_cell, srv_cell=srv_cell, cloud_cell=cloud_cell,
+    )

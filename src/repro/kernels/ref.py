@@ -220,3 +220,34 @@ def ssd_decode_naive(state, xt, dtt, a_log, bt, ct, d_skip):
     y = jnp.einsum("bhpn,bn->bhp", new_state, ct.astype(f32))
     y = y + xt.astype(f32) * d_skip.astype(f32)[None, :, None]
     return y.astype(xt.dtype), new_state
+
+
+# ======================= Routing score (paper eq. 11) =========================
+def route_score_xla(
+    prompt_bits, size_bits, flops_tok, work,
+    uplink_bps, backhaul_bps, flops_per_s,
+    queue_tokens=None, resident=None, model=None,
+    req_cell=None, srv_cell=None, cloud_cell=-1,
+):
+    """XLA oracle for the fused (B, N) routing-score kernel.
+
+    Same plain-array signature as ``route_score.route_score``; the
+    eq. 5 + 7 + 9 arithmetic itself lives in
+    ``core.costs.edge_score_matrix`` (the single home of the cost
+    model), with the residency gather and the multi-cell visibility
+    mask applied here. Out-of-cell, non-cloud pairs score ``+inf``.
+    """
+    from repro.core import costs  # leaf module (jnp-only): no cycle
+
+    res_bn = resident[:, model].T if resident is not None else None
+    score = costs.edge_score_matrix(
+        prompt_bits, size_bits, flops_tok, work,
+        uplink_bps, backhaul_bps, flops_per_s,
+        queue_tokens=queue_tokens, resident=res_bn,
+    )
+    if req_cell is not None and srv_cell is not None:
+        visible = (srv_cell[None, :] == req_cell[:, None]) | (
+            srv_cell[None, :] == cloud_cell
+        )
+        score = jnp.where(visible, score, jnp.inf)
+    return score

@@ -22,9 +22,18 @@ Cell / drain knobs (the multi-cell + time-based-drain serving path):
     wall clock inside the scan carry rather than request count.
     ``--drain-rate 0`` (default) keeps the legacy synchronous drain.
 
+Performance knobs (the chunked two-phase commit, see
+``core.batch_router``): ``--chunk C`` scores C requests per fused
+kernel call and runs the slimmed correction scan between calls
+(identical routing decisions, ~2x req/s at fleet scale); ``--backend``
+picks the scoring backend (``xla`` | ``pallas`` | ``pallas-interpret``,
+default from ``$REPRO_ROUTER_BACKEND``).
+
     python -m repro.launch.serve --requests 64 --servers 3
     python -m repro.launch.serve --requests 256 --servers 4 --cells 4 \
         --drain-rate 50 --arrival-rate 100 --no-execute
+    python -m repro.launch.serve --requests 4096 --servers 64 \
+        --chunk 256 --no-execute
 """
 from __future__ import annotations
 
@@ -90,7 +99,8 @@ def make_multicell_fleet(n_cells: int, servers_per_cell: int, catalog,
 
 
 def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
-          gen_tokens=8, n_cells=1, drain_rate=0.0, arrival_rate=100.0):
+          gen_tokens=8, n_cells=1, drain_rate=0.0, arrival_rate=100.0,
+          chunk=None, backend=None):
     rng = np.random.default_rng(seed)
     # serve the edge-suitable (small) members of the catalogue
     edge_archs = ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
@@ -139,7 +149,7 @@ def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
         fleet_params, fleet_state, reqs,
         None if drain_rate > 0.0
         else gen_tokens * len(fleet) / max(num_requests, 1),
-        policy=policy,
+        policy=policy, chunk=chunk, backend=backend,
     )
     jax.block_until_ready(out.choice)
     route_s = time.time() - t0
@@ -197,12 +207,20 @@ def main():
                     help="fleet-wide request arrivals per second (drives "
                          "the time-based drain)")
     ap.add_argument("--policy", default="greedy", choices=["greedy", "load"])
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="two-phase commit chunk size (None = single-scan "
+                         "path; 256 is a good default at fleet scale)")
+    ap.add_argument("--backend", default=None,
+                    choices=["xla", "pallas", "pallas-interpret"],
+                    help="scoring backend (default: $REPRO_ROUTER_BACKEND "
+                         "or xla)")
     ap.add_argument("--no-execute", action="store_true",
                     help="route only (no local generation)")
     args = ap.parse_args()
     stats = serve(args.requests, args.servers, args.policy,
                   execute=not args.no_execute, n_cells=args.cells,
-                  drain_rate=args.drain_rate, arrival_rate=args.arrival_rate)
+                  drain_rate=args.drain_rate, arrival_rate=args.arrival_rate,
+                  chunk=args.chunk, backend=args.backend)
     for k, v in stats.items():
         print(f"{k}: {v}")
 

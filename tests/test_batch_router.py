@@ -253,10 +253,114 @@ def test_midstream_snapshot_continues_oracle():
         _assert_fleet_state_matches(router, state)
 
 
+@pytest.mark.parametrize("backend", ["xla", "pallas-interpret"])
+@pytest.mark.parametrize("chunk", [64, 100])
+def test_chunked_matches_scalar_oracle(chunk, backend):
+    """The two-phase chunked commit (incl. a chunk that does NOT divide
+    B, exercising the inert padding tail) reproduces the oracle's
+    choices, hits, residency, LRU clocks and queues under BOTH scoring
+    backends; latencies agree to a few ulps (the chunked path
+    re-associates eq. 9, see batch_router docstring)."""
+    with enable_x64():
+        rng = np.random.default_rng(31)
+        servers = _random_fleet(rng, 5, 2)
+        models, bits, toks = _random_stream(rng, 300)
+        drain = float(rng.uniform(0.0, 50.0))
+
+        router, sc_choice, sc_lat, sc_hit = _run_scalar(
+            servers, models, bits, toks, drain
+        )
+        params, state = br.fleet_from_servers(servers, CATALOG)
+        reqs = br.RequestBatch(
+            model=jnp.asarray(models, jnp.int32),
+            prompt_bits=jnp.asarray(bits, jnp.float64),
+            gen_tokens=jnp.asarray(toks, jnp.float64),
+        )
+        state, out = br.route_batch(params, state, reqs, drain, chunk=chunk,
+                                    backend=backend)
+        np.testing.assert_array_equal(np.asarray(out.choice), sc_choice)
+        np.testing.assert_array_equal(np.asarray(out.hit), sc_hit)
+        np.testing.assert_allclose(np.asarray(out.latency), sc_lat,
+                                   rtol=1e-12, atol=0.0)
+        _assert_fleet_state_matches(router, state)
+
+
+def test_chunked_matches_legacy_scan_all_policies():
+    """chunk=c and chunk=None agree decision-for-decision per policy."""
+
+    def busiest_actor(obs, lats):
+        queue = jnp.reshape(jnp.asarray(obs), (-1, 3))[:, 1]
+        return jnp.argmax(queue)
+
+    rng = np.random.default_rng(33)
+    servers = _random_fleet(rng, 6, 2)
+    models, bits, toks = _random_stream(rng, 250)
+    params, state = br.fleet_from_servers(servers, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+    )
+    for policy, actor in [("greedy", None), ("load", None),
+                          ("actor", busiest_actor)]:
+        s0, o0 = br.route_batch(params, state, reqs, 3.0, policy=policy,
+                                actor=actor)
+        s1, o1 = br.route_batch(params, state, reqs, 3.0, policy=policy,
+                                actor=actor, chunk=64)
+        np.testing.assert_array_equal(np.asarray(o0.choice),
+                                      np.asarray(o1.choice), err_msg=policy)
+        np.testing.assert_array_equal(np.asarray(s0.resident),
+                                      np.asarray(s1.resident), err_msg=policy)
+        np.testing.assert_allclose(np.asarray(s0.queue_tokens),
+                                   np.asarray(s1.queue_tokens), rtol=1e-6)
+
+
+def test_stats_masks_rejected_requests():
+    """Rejected requests must not poison mean_latency; completion_rate
+    reports them (the paper's third headline metric)."""
+    out = br.RouteOutcome(
+        choice=jnp.asarray([0, -1, 2, -1], jnp.int32),
+        latency=jnp.asarray([1.0, jnp.inf, 3.0, jnp.inf], jnp.float32),
+        hit=jnp.asarray([True, False, False, False]),
+    )
+    got = br.stats(out)
+    assert got["mean_latency"] == pytest.approx(2.0)
+    assert got["completion_rate"] == pytest.approx(0.5)
+    assert got["residency_hit_rate"] == pytest.approx(0.25)
+
+    none = br.stats(out._replace(
+        choice=jnp.full((4,), -1, jnp.int32),
+        latency=jnp.full((4,), jnp.inf, jnp.float32),
+    ))
+    assert none["completion_rate"] == 0.0
+    assert np.isinf(none["mean_latency"])  # no finite sample to average
+
+
+def test_route_batch_unroll_is_a_knob():
+    """unroll only changes the compiled schedule, never a decision."""
+    rng = np.random.default_rng(35)
+    servers = _random_fleet(rng, 4, 2)
+    models, bits, toks = _random_stream(rng, 120)
+    params, state = br.fleet_from_servers(servers, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+    )
+    ref_state, ref_out = br.route_batch(params, state, reqs)
+    for unroll in (1, 4, 32):
+        s, o = br.route_batch(params, state, reqs, unroll=unroll)
+        np.testing.assert_array_equal(np.asarray(o.choice),
+                                      np.asarray(ref_out.choice))
+        np.testing.assert_array_equal(np.asarray(s.last_use),
+                                      np.asarray(ref_state.last_use))
+
+
 @pytest.mark.slow
 def test_fleet_scale_single_call():
     """Acceptance shape: B=4096 requests over N=64 servers, one jitted call,
-    still bit-identical to the scalar oracle on choices and residency."""
+    still bit-identical to the scalar oracle on choices and residency —
+    on both the single-scan path and the chunked two-phase commit."""
     rng = np.random.default_rng(42)
     servers = _random_fleet(rng, 64, 2)
     models, bits, toks = _random_stream(rng, 4096)
@@ -268,3 +372,13 @@ def test_fleet_scale_single_call():
     resident = np.asarray(state.resident)
     for i, srv in enumerate(router.servers):
         assert set(np.nonzero(resident[i])[0]) == set(srv.resident), i
+
+    params, st0 = br.fleet_from_servers(servers, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+    )
+    st_c, out_c = br.route_batch(params, st0, reqs, 0.0, chunk=256)
+    np.testing.assert_array_equal(np.asarray(out_c.choice), sc_choice)
+    np.testing.assert_array_equal(np.asarray(st_c.resident), resident)

@@ -279,6 +279,104 @@ def test_midstream_snapshot_carries_wall_clock():
         _assert_fleet_state_matches(router, state)
 
 
+@pytest.mark.parametrize("backend", ["xla", "pallas-interpret"])
+@pytest.mark.parametrize("seed,n_cells,chunk", [
+    (40, 1, 64), (41, 2, 100), (42, 4, 64), (43, 4, 300),
+])
+def test_chunked_multicell_matches_scalar_oracle(seed, n_cells, chunk,
+                                                 backend):
+    """The chunked two-phase commit reproduces the oracle for C in
+    {1, 2, 4} cells with cloud fallback + time drain enabled, under
+    both scoring backends, including chunks that do not divide B."""
+    with enable_x64():
+        rng = np.random.default_rng(seed)
+        fleet = _random_multicell_fleet(rng, n_cells, 3)
+        models, bits, toks, cells, arrivals = _random_stream(
+            rng, 250, n_cells
+        )
+        router, sc_choice, sc_lat = _run_scalar(
+            fleet, models, bits, toks, cells, arrivals
+        )
+        params, state = br.fleet_from_servers(fleet, CATALOG)
+        reqs = br.RequestBatch(
+            model=jnp.asarray(models, jnp.int32),
+            prompt_bits=jnp.asarray(bits, jnp.float64),
+            gen_tokens=jnp.asarray(toks, jnp.float64),
+            cell=jnp.asarray(cells, jnp.int32),
+            arrival_s=jnp.asarray(arrivals, jnp.float64),
+        )
+        state, out = br.route_batch(params, state, reqs, chunk=chunk,
+                                    backend=backend)
+        np.testing.assert_array_equal(np.asarray(out.choice), sc_choice)
+        # the chunked path re-associates eq. 9 (see batch_router
+        # docstring): latencies agree to ulps, decisions exactly
+        np.testing.assert_allclose(np.asarray(out.latency), sc_lat,
+                                   rtol=1e-12, atol=0.0)
+        _assert_fleet_state_matches(router, state)
+
+
+def test_chunked_orphan_rejection_and_stats():
+    """Chunked path: infeasible requests reject uncommitted, and
+    ``stats`` masks them out of mean_latency via completion_rate."""
+    rng = np.random.default_rng(44)
+    fleet = _random_multicell_fleet(rng, 2, 2, cloud=False)
+    models = np.array([0, 1, 2, 3])
+    bits = np.array([2e5, 3e5, 4e5, 5e5])
+    toks = np.array([8, 16, 4, 2])
+    cells = np.array([0, 5, 1, 7])  # requests 1 and 3 are unroutable
+    arrivals = np.array([0.1, 0.2, 0.3, 0.4])
+
+    router, sc_choice, _ = _run_scalar(
+        fleet, models, bits, toks, cells, arrivals
+    )
+    params, state = br.fleet_from_servers(fleet, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+        cell=jnp.asarray(cells, jnp.int32),
+        arrival_s=jnp.asarray(arrivals, jnp.float32),
+    )
+    state, out = br.route_batch(params, state, reqs, chunk=3)
+    np.testing.assert_array_equal(np.asarray(out.choice), sc_choice)
+    assert np.isinf(np.asarray(out.latency)[[1, 3]]).all()
+    _assert_fleet_state_matches(router, state)
+
+    summary = br.stats(out)
+    assert summary["completion_rate"] == pytest.approx(0.5)
+    assert np.isfinite(summary["mean_latency"])
+
+
+def test_chunked_clamps_custom_policy_like_legacy():
+    """A custom callable policy that picks out-of-cell servers is
+    clamped to the masked argmin identically on the chunked and
+    single-scan paths (decision-for-decision, state-for-state)."""
+
+    def rogue(lats, obs, queue):
+        return jnp.int32(0)  # always server 0, whatever the cell
+
+    rng = np.random.default_rng(45)
+    fleet = _random_multicell_fleet(rng, 3, 2)
+    models, bits, toks, cells, arrivals = _random_stream(rng, 150, 3)
+    params, state = br.fleet_from_servers(fleet, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+        cell=jnp.asarray(cells, jnp.int32),
+        arrival_s=jnp.asarray(arrivals, jnp.float32),
+    )
+    s0, o0 = br.route_batch(params, state, reqs, policy=rogue)
+    s1, o1 = br.route_batch(params, state, reqs, policy=rogue, chunk=64)
+    np.testing.assert_array_equal(np.asarray(o0.choice),
+                                  np.asarray(o1.choice))
+    np.testing.assert_array_equal(np.asarray(s0.resident),
+                                  np.asarray(s1.resident))
+    srv_cell = np.array([s.cell for s in fleet])
+    chosen = srv_cell[np.asarray(o1.choice)]
+    assert np.all((chosen == cells) | (chosen == CLOUD_CELL))
+
+
 def test_actor_cannot_escape_cell_mask():
     """An actor that picks out-of-cell servers is clamped to the masked
     greedy argmin — identically in the scalar and batched paths."""
