@@ -1,0 +1,222 @@
+"""Policy quality under bursty multi-cell serving: greedy vs drain-aware
+vs a TRAINED MADDPG-MATO actor, end to end through ``route_batch``.
+
+Unlike the throughput benchmarks (req/s of the same decisions), this one
+measures decision QUALITY: the same bursty request stream is routed over
+the same multi-cell fleet by each policy, and we record the paper's
+headline metrics — predicted eq. 11 latency, per-request energy (the
+eq. 6/8/10 serving analogue), completion rate — plus the model-hit rate
+and the cloud-fallback rate.
+
+The trained actor is the real thing: if no checkpoint exists under
+``benchmarks/results/actor_ckpt``, a short-budget MADDPG-MATO run
+(``core.maddpg.train_jit`` on the paper env with the REAL catalogue
+model sizes) trains one, saves it through
+``core.policies.save_actor_checkpoint`` and the benchmark restores it
+exactly the way ``launch.serve --policy actor:<dir>`` does. Delete the
+directory for a fresh training run; with the checkpoint cached the
+whole benchmark is routing-only.
+
+    PYTHONPATH=src python -m benchmarks.policy_serving
+
+prints the CSV sweep (``name,us_per_call,derived``) and rewrites
+``benchmarks/BENCH_policy.json`` — the recorded policy-quality
+trajectory alongside ``BENCH_router.json``'s throughput trajectory.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch_router as br
+from repro.core import costs, maddpg, policies
+from repro.core.catalog import build_catalog, env_params_from_catalog
+from repro.core.router import Request
+from repro.launch.serve import make_multicell_fleet
+
+EDGE_ARCHS = ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
+RESULTS = pathlib.Path(__file__).parent / "results"
+CKPT_DIR = RESULTS / "actor_ckpt"
+JSON_PATH = pathlib.Path(__file__).parent / "BENCH_policy.json"
+
+# serving shape: C cells x N edge servers + cloud, bursty arrivals
+CELLS = 2
+SERVERS_PER_CELL = 3
+REQUESTS = 1024
+BURST = 64            # requests per burst (arrive nearly simultaneously)
+BURST_GAP_S = 0.5     # quiet gap between bursts (queues drain here)
+DRAIN_RATE = 3e4      # tokens/sec — comparable to the servers' decode
+                      # throughput, so drain-aware pricing actually bites
+
+# short-budget training run that produces the served checkpoint
+TRAIN = dict(total_steps=600, batch_size=128, warmup=200, update_every=5,
+             n_envs=4, explore_decay_steps=400)
+TRAIN_EDS = 6
+
+
+def ensure_checkpoint(verbose=True):
+    """Restore-or-train the served actor; returns (ckpt_dir, meta dict)."""
+    meta_path = CKPT_DIR / "train_meta.json"
+    try:
+        policies.load_actor_checkpoint(CKPT_DIR)
+        meta = json.loads(meta_path.read_text()) if meta_path.exists() else {}
+        return CKPT_DIR, meta
+    except (FileNotFoundError, ValueError):
+        pass
+    catalog = build_catalog(EDGE_ARCHS)
+    p = env_params_from_catalog(catalog, num_eds=TRAIN_EDS,
+                                num_ess=SERVERS_PER_CELL)
+    cfg = maddpg.AlgoConfig(**TRAIN)
+    t0 = time.time()
+    ts, metrics = maddpg.train_jit(jax.random.key(0), p, cfg)
+    jax.block_until_ready(metrics["reward"])
+    wall = time.time() - t0
+    r0 = float(np.asarray(metrics["reward"])[:50].mean())
+    r1 = float(np.asarray(metrics["reward"])[-50:].mean())
+    policies.save_actor_checkpoint(CKPT_DIR, ts.actor, p, cfg)
+    meta = {
+        "train_steps": TRAIN["total_steps"], "train_wall_s": round(wall, 1),
+        "num_eds": TRAIN_EDS, "num_ess": SERVERS_PER_CELL,
+        "num_models": p.num_models,
+        "reward_first50": round(r0, 2), "reward_last50": round(r1, 2),
+    }
+    meta_path.write_text(json.dumps(meta))
+    if verbose:
+        print(f"trained actor checkpoint in {wall:.0f}s "
+              f"(reward {r0:.1f} -> {r1:.1f}); cached at {CKPT_DIR}")
+    return CKPT_DIR, meta
+
+
+def bursty_stream(rng, n, n_cells, num_models):
+    """Bursts of ``BURST`` near-simultaneous requests every
+    ``BURST_GAP_S`` seconds, random cells/models — the arrival pattern
+    where queue-drain awareness matters."""
+    burst_idx = np.arange(n) // BURST
+    arrivals = burst_idx * BURST_GAP_S + rng.uniform(0.0, 1e-3, n)
+    arrivals = np.sort(arrivals)
+    return br.RequestBatch(
+        model=jnp.asarray(rng.integers(0, num_models, n), jnp.int32),
+        prompt_bits=jnp.asarray(rng.uniform(1e5, 1e6, n), jnp.float32),
+        gen_tokens=jnp.asarray(rng.integers(8, 128, n), jnp.float32),
+        cell=jnp.asarray(rng.integers(0, n_cells, n), jnp.int32),
+        arrival_s=jnp.asarray(arrivals, jnp.float32),
+    )
+
+
+def mean_energy_j(params, reqs, out, p_tx=0.5, p_bh=2.0, kappa=1e-29):
+    """Per-request serving energy, the eq. 6/8/10 analogue through the
+    ``core.costs`` functions (the single home of the cost arithmetic):
+    uplink transmission + model switch (when the request missed
+    residency) + edge compute (kappa * f^2 * work/f), averaged over
+    completed requests."""
+    choice = np.asarray(out.choice)
+    ok = choice >= 0
+    ch = np.maximum(choice, 0)
+    model = np.asarray(reqs.model)
+    flops = np.asarray(params.flops_per_s)[ch]
+    t_trans = costs.trans_latency(
+        np.asarray(reqs.prompt_bits), 1.0, np.asarray(params.uplink_bps)[ch]
+    )
+    t_switch = np.where(
+        np.asarray(out.hit), 0.0,
+        costs.switch_latency(np.asarray(params.size_bits)[model],
+                             np.asarray(params.backhaul_bps)[ch]),
+    )
+    work = (np.asarray(reqs.gen_tokens)
+            * np.asarray(params.decode_flops_per_token)[model])
+    e = costs.edge_total_energy(
+        costs.trans_energy(p_tx, t_trans),
+        costs.switch_energy(p_bh, t_switch),
+        kappa * flops**2 * (work / flops),
+    )
+    return float(np.where(ok, np.asarray(e), 0.0).sum() / max(ok.sum(), 1))
+
+
+def route_with(policy, fleet, catalog, params, state, reqs, repeats=3):
+    """Route the stream under one policy; returns (stats dict, outcome)."""
+    _, out = br.route_batch(params, state, reqs, policy=policy)  # compile
+    jax.block_until_ready(out.choice)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _, out = br.route_batch(params, state, reqs, policy=policy)
+        jax.block_until_ready(out.choice)
+        best = min(best, time.perf_counter() - t0)
+    s = br.stats(out)
+    # fair-fight latency: reprice the stream under the drain-corrected
+    # cost model (raw eq. 11 is greedy's own objective and overstates
+    # the wait behind fast-draining queues)
+    requests = [
+        Request(int(m), float(b), int(t), cell=int(c), arrival_s=float(a))
+        for m, b, t, c, a in zip(
+            np.asarray(reqs.model), np.asarray(reqs.prompt_bits),
+            np.asarray(reqs.gen_tokens), np.asarray(reqs.cell),
+            np.asarray(reqs.arrival_s))
+    ]
+    s["mean_latency_corrected"] = float(np.mean(
+        policies.drain_corrected_latencies(fleet, catalog, requests,
+                                           np.asarray(out.choice))
+    ))
+    s["mean_energy_j"] = mean_energy_j(params, reqs, out)
+    n = np.asarray(params.flops_per_s).shape[0]
+    s["cloud_fallback_rate"] = float(
+        np.mean(np.asarray(out.choice) == n - 1)  # cloud column is last
+    )
+    s["route_s"] = round(best, 4)
+    s["req_per_s"] = round(reqs.model.shape[0] / best)
+    return s, out
+
+
+def main(emit_json=True, header=True, verbose=True):
+    if header:
+        print("name,us_per_call,derived")
+    ckpt_dir, train_meta = ensure_checkpoint(verbose=verbose)
+    catalog = build_catalog(EDGE_ARCHS)
+    fleet = make_multicell_fleet(CELLS, SERVERS_PER_CELL, catalog,
+                                 drain_rate=DRAIN_RATE)
+    params, state = br.fleet_from_servers(fleet, catalog)
+    rng = np.random.default_rng(7)
+    reqs = bursty_stream(rng, REQUESTS, CELLS, len(catalog))
+
+    actor_policy = policies.load_actor_policy(ckpt_dir, params)
+    results = {}
+    for name, policy in [("greedy", "greedy"), ("drain", "drain"),
+                         ("actor", actor_policy)]:
+        s, _ = route_with(policy, fleet, catalog, params, state, reqs)
+        results[name] = s
+        print(
+            f"policy_{name}_c{CELLS}_n{SERVERS_PER_CELL}_b{REQUESTS},"
+            f"{s['route_s'] / REQUESTS * 1e6:.2f},"
+            f"latency={s['mean_latency']:.4f}"
+            f";corrected={s['mean_latency_corrected']:.4f}"
+            f";energy_j={s['mean_energy_j']:.4f}"
+            f";completion={s['completion_rate']:.3f}"
+            f";hit_rate={s['residency_hit_rate']:.3f}"
+            f";cloud={s['cloud_fallback_rate']:.3f}"
+        )
+
+    if emit_json:
+        payload = {
+            "shape": {
+                "cells": CELLS, "servers_per_cell": SERVERS_PER_CELL,
+                "cloud": True, "requests": REQUESTS, "burst": BURST,
+                "burst_gap_s": BURST_GAP_S, "drain_rate": DRAIN_RATE,
+            },
+            "checkpoint": {"dir": str(CKPT_DIR.relative_to(JSON_PATH.parent)),
+                           **train_meta},
+            "policies": results,
+        }
+        JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {JSON_PATH.name}: latency "
+              + " ".join(f"{k}={v['mean_latency']:.3f}"
+                         for k, v in results.items()))
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -118,6 +118,16 @@ def bench_multicell():
                               batch_sizes=(1024,), header=False)
 
 
+def bench_policy_serving():
+    """Policy QUALITY (not req/s): greedy vs drain-aware vs a trained
+    MADDPG-MATO actor checkpoint on the same bursty multi-cell stream;
+    refreshes benchmarks/BENCH_policy.json. Trains a short-budget
+    checkpoint on first run (cached under benchmarks/results/)."""
+    from benchmarks import policy_serving
+
+    policy_serving.main(header=False)
+
+
 def bench_train_step():
     from repro.configs import get_arch, reduced
     from repro.data import pipeline
@@ -185,6 +195,7 @@ def main() -> None:
     bench_score_kernel()
     bench_router()
     bench_multicell()
+    bench_policy_serving()
     bench_train_step()
     paper_tables()
     faithful_table()

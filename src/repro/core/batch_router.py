@@ -48,9 +48,37 @@ Design
   rounds differently). ``chunk=None`` (default) keeps the single-scan
   path whose latencies are bit-exact against the oracle.
 * **Pluggable policies**: ``greedy`` (argmin of the eq. 11 latency),
-  ``actor`` (a trained MADDPG actor called with the same observation
-  layout the scalar router exposes), ``load`` (least-loaded server,
-  switch-blind — a fleet-level baseline).
+  ``drain`` (drain-aware greedy: the queue backlog is discounted by the
+  server's ``drain_rate`` before eq. 9 pricing), ``actor`` (a trained
+  MADDPG actor called with the same observation layout the scalar router
+  exposes — restored checkpoints plug in via ``core.policies``),
+  ``load`` (least-loaded server, switch-blind — a fleet-level baseline).
+
+Policy dispatch contract
+------------------------
+A policy is any traceable callable ``policy_fn(lats, obs, queue) ->
+server index`` evaluated once per request inside the routing scan:
+
+* ``lats``  — (N,) eq. 11 latencies against the CURRENT fleet state,
+  ``+inf`` on servers outside the request's cell;
+* ``obs``   — (3N,) scalar-router observation (``[resident, queue,
+  flops]`` per server), or ``None`` if the policy sets ``needs_obs =
+  False`` (saves building it in the compiled scan);
+* ``queue`` — (N,) queue depths, ``+inf``-masked like ``lats``.
+
+Two opt-in attributes refine the contract:
+
+* ``needs_obs`` (default True) — set False to skip the obs build;
+* ``needs_ctx`` (default False) — set True to be called as
+  ``policy_fn(lats, obs, queue, ctx)`` with a per-request ``PolicyCtx``
+  (fleet params, tagged model, prompt/gen scalars, raw queues, the
+  model's residency row and the request cell). ``core.policies`` builds
+  the trained-actor policy on exactly this hook.
+
+Whatever the policy returns is clamped to the request's cell (an
+out-of-cell choice falls back to the masked greedy argmin) and committed
+with full LRU/queue semantics; a policy can therefore never corrupt the
+fleet state, only pick worse servers.
 
 Multi-cell fleets
 -----------------
@@ -76,8 +104,8 @@ tracks wall clock rather than request count. ``drain_rate == 0`` (or
 ``arrival_s=None``) reproduces the synchronous behaviour exactly; the
 legacy per-request ``drain_tokens`` argument is still honoured.
 
-Follow-on tracked in ROADMAP: trained-actor serving through
-``launch/serve.py``.
+``launch/serve.py`` exposes all of this end to end (``--policy
+{greedy,load,drain,actor:<ckpt>}``); ``docs/serving.md`` is the guide.
 """
 from __future__ import annotations
 
@@ -284,8 +312,26 @@ def score_matrix(params: FleetParams, state: FleetState, reqs: RequestBatch,
 
 
 # ---------------------------------------------------------------------------
-# policies: (latencies (N,), obs (3N,), queue (N,)) -> server index
+# policies: (latencies (N,), obs (3N,), queue (N,)[, ctx]) -> server index
+# (full contract in the module docstring)
 # ---------------------------------------------------------------------------
+class PolicyCtx(NamedTuple):
+    """Per-request context handed to policies with ``needs_ctx = True``.
+
+    Everything is as of DECISION time: after the wall-clock queue decay,
+    before the commit. ``queue`` is the raw (unmasked) depth vector —
+    ``lats`` already carries the cell mask as ``+inf``."""
+
+    params: FleetParams
+    model: jnp.ndarray        # () int32 tagged catalogue index
+    prompt_bits: jnp.ndarray  # ()
+    gen_tokens: jnp.ndarray   # ()
+    flops_tok: jnp.ndarray    # () decode FLOPs/token of the tagged model
+    resident: jnp.ndarray     # (N,) bool residency of the tagged model
+    queue: jnp.ndarray        # (N,) raw queue depths
+    cell: Optional[jnp.ndarray] = None  # () int32, None when untopologied
+
+
 def _greedy_policy(lats, obs, queue):
     return jnp.argmin(lats)
 
@@ -294,8 +340,40 @@ def _load_policy(lats, obs, queue):
     return jnp.argmin(queue)
 
 
+def _drain_policy(lats, obs, queue, ctx):
+    """Drain-aware greedy: discount the queue backlog by the server's
+    continuous ``drain_rate`` before the eq. 9 pricing.
+
+    Eq. 9 prices the backlog as pure compute, ``q * ftok / f``. With a
+    continuous drain of ``r`` tokens/sec the backlog is also being
+    consumed while the request waits, so the self-consistent wait
+    ``t_q = (q - r * t_q) * ftok / f`` solves to
+
+        t_q = q * ftok / (f + r * ftok)
+
+    i.e. the backlog is discounted by ``f / (f + r * ftok)``. The policy
+    swaps that term into the eq. 11 score and argmins; the REPORTED
+    latency stays the undiscounted eq. 11 value at the chosen server, so
+    outcomes remain comparable across policies. ``drain_rate == 0`` (or
+    absent) makes the score identical to greedy's."""
+    rate = ctx.params.drain_rate
+    if rate is None:
+        return jnp.argmin(lats)
+    f = ctx.params.flops_per_s
+    backlog = ctx.queue * ctx.flops_tok
+    return jnp.argmin(lats - backlog / f + backlog / (f + rate * ctx.flops_tok))
+
+
 _greedy_policy.needs_obs = False
 _load_policy.needs_obs = False
+_drain_policy.needs_obs = False
+_drain_policy.needs_ctx = True
+
+#: Builtin argmin policies whose score is +inf exactly where the cell
+#: mask is: they can only land out of cell when the whole row is
+#: infeasible (-> rejected either way), so the chunked path skips the
+#: out-of-cell clamp for them.
+_ARGMIN_POLICIES = (_greedy_policy, _load_policy, _drain_policy)
 
 
 def _make_actor_policy(actor: Callable[[Any, Any], Any]):
@@ -313,6 +391,8 @@ def _resolve_policy(policy, actor):
         return _greedy_policy
     if policy == "load":
         return _load_policy
+    if policy == "drain":
+        return _drain_policy
     if policy == "actor":
         if actor is None:
             raise ValueError("policy='actor' requires an actor callable")
@@ -452,11 +532,13 @@ def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     latencies vs the scalar oracle — same term order, same rounding)."""
     t_trans, switch_price, flops_tok = _static_costs(params, reqs)
     work = gen_tokens * flops_tok                               # (B,)
+    needs_ctx = getattr(policy_fn, "needs_ctx", False)
+    prompt = reqs.prompt_bits if needs_ctx else None
 
     def step(carry, xs):
         resident, last_use, queue, clock, time_s = carry
         (model, t_trans_b, switch_b, flops_tok_b, work_b, drain_b, gen_b,
-         cell_b, arrival_b) = xs
+         cell_b, arrival_b, prompt_b) = xs
 
         if has_time:  # wall-clock queue decay since the last arrival
             dt = jnp.maximum(arrival_b - time_s, 0.0)
@@ -481,7 +563,17 @@ def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             ).reshape(-1)                                       # (3N,)
         else:
             obs = None
-        choice = jnp.asarray(policy_fn(lats, obs, queue_vis), jnp.int32)
+        if needs_ctx:
+            ctx = PolicyCtx(
+                params=params, model=model, prompt_bits=prompt_b,
+                gen_tokens=gen_b, flops_tok=flops_tok_b,
+                resident=resident_m, queue=queue,
+                cell=cell_b if has_cells else None,
+            )
+            choice = jnp.asarray(policy_fn(lats, obs, queue_vis, ctx),
+                                 jnp.int32)
+        else:
+            choice = jnp.asarray(policy_fn(lats, obs, queue_vis), jnp.int32)
         if has_cells:
             # an actor may ignore the inf-masked inputs; never commit an
             # out-of-cell choice — fall back to the masked greedy argmin
@@ -500,7 +592,7 @@ def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
         return (resident, last_use, queue, clock, time_s), out
 
     xs = (reqs.model, t_trans, switch_price, flops_tok, work, drain,
-          gen_tokens, reqs.cell if has_cells else None, arrivals)
+          gen_tokens, reqs.cell if has_cells else None, arrivals, prompt)
     return jax.lax.scan(step, carry, xs, unroll=unroll)
 
 
@@ -577,11 +669,12 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     # padded tail requests are inert: no commit, no clock/time advance
     valid = (jnp.arange(n_chunks * c) < b) if pad else None
     needs_obs = getattr(policy_fn, "needs_obs", True)
+    needs_ctx = getattr(policy_fn, "needs_ctx", False)
     # the builtin argmins can only land on an invisible server when the
     # whole row is +inf (-> rejected either way), so the out-of-cell
     # clamp is skipped for them; every other policy gets clamped,
     # matching the single-scan path decision for decision
-    needs_clamp = policy_fn not in (_greedy_policy, _load_policy)
+    needs_clamp = policy_fn not in _ARGMIN_POLICIES
     iota_n = jnp.arange(n, dtype=jnp.int32)
     num_k = params.size_bits.shape[0]
     iota_k = jnp.arange(num_k + 1, dtype=jnp.int32)  # +1: free-slot row
@@ -601,7 +694,8 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
 
     def step(carry, xs):
         lru, queue, clock, time_s = carry
-        model_b, scal_b, drain_b, arrival_b, valid_b, base_b = xs
+        model_b, scal_b, drain_b, arrival_b, valid_b, base_b, prompt_b, \
+            cell_b = xs
         gen_b, size_b, ftok_b = scal_b[0], scal_b[1], scal_b[2]
 
         if has_time:  # wall-clock residue: queue decay since last arrival
@@ -641,7 +735,16 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             # visibility is already folded into base as +inf; XLA DCEs
             # this for policies that never read the queue (greedy)
             queue_vis = jnp.where(jnp.isfinite(base_b), queue, jnp.inf)
-        choice = jnp.asarray(policy_fn(lats, obs, queue_vis), jnp.int32)
+        if needs_ctx:
+            ctx = PolicyCtx(
+                params=params, model=model_b, prompt_bits=prompt_b,
+                gen_tokens=gen_b, flops_tok=ftok_b, resident=resident_m,
+                queue=queue, cell=cell_b,
+            )
+            choice = jnp.asarray(policy_fn(lats, obs, queue_vis, ctx),
+                                 jnp.int32)
+        else:
+            choice = jnp.asarray(policy_fn(lats, obs, queue_vis), jnp.int32)
         if has_cells and needs_clamp:
             # an actor may ignore the inf-masked inputs; never commit an
             # out-of-cell choice — fall back to the masked greedy argmin
@@ -704,7 +807,9 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             srv_cell=params.cell if has_cells else None,
             cloud_cell=CLOUD_CELL, backend=backend,
         )                                                       # (c, N)
-        inner = (model_c, scal_c, drain_c, arr_c, valid_c, base)
+        inner = (model_c, scal_c, drain_c, arr_c, valid_c, base,
+                 prompt_c if needs_ctx else None,
+                 cell_c if needs_ctx and has_cells else None)
         return jax.lax.scan(step, carry, inner, unroll=min(unroll, c))
 
     # (c, 3) strip of per-request scalars: one xs slice per step

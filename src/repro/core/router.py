@@ -8,9 +8,14 @@ exactly the paper's cost terms per candidate:
     transmission (eq. 5)  +  model switch if not resident (eq. 7)
     +  compute at the server's share of capacity (eq. 9, FIFO-fair)
 
-Two policies share the scoring code:
+Three policies share the scoring code:
   * ``policy="greedy"``  — myopically minimise the eq. 11 latency
     (the paper's Greedy gets this wrong by ignoring switches/contention);
+  * ``policy="drain"``   — drain-aware greedy: the queue backlog is
+    discounted by the server's continuous ``drain_rate`` before the
+    eq. 9 pricing (``q*ftok/(f + r*ftok)`` instead of ``q*ftok/f``), so
+    fast-draining servers keep winning under bursts. The reported
+    latency stays the undiscounted eq. 11 value at the choice;
   * ``policy="actor"``   — a trained MADDPG-MATO actor drives the choice
     (requests act as agents over the same observation layout as the env).
 
@@ -99,6 +104,18 @@ class ModelAwareRouter:
         t_comp = (backlog + work) / srv.flops_per_s                 # eq. (9)
         return t_trans + t_switch + t_comp                          # eq. (11)
 
+    def _drain_score(self, srv: EdgeServer, req: Request, lat: float) -> float:
+        """Drain-aware decision score: swap eq. 9's backlog term for the
+        self-consistent drained wait ``q*ftok/(f + r*ftok)`` (the backlog
+        is consumed by compute AND the continuous drain while the request
+        waits). Mirrors ``batch_router._drain_policy`` term for term."""
+        ftok = self.catalog[req.model].decode_flops_per_token
+        backlog = srv.queue_tokens * ftok
+        return (
+            lat - backlog / srv.flops_per_s
+            + backlog / (srv.flops_per_s + srv.drain_rate * ftok)
+        )
+
     def _visible(self, srv: EdgeServer, req: Request) -> bool:
         """Cell visibility: in-cell servers plus the fleet-wide cloud."""
         return srv.cell == req.cell or srv.cell == CLOUD_CELL
@@ -126,6 +143,13 @@ class ModelAwareRouter:
                 # never commit an out-of-cell actor choice — fall back to
                 # the masked greedy argmin (mirrors the batched path)
                 choice = int(np.argmin(lats))
+        elif self.policy == "drain":
+            scores = [
+                self._drain_score(s, req, lat) if np.isfinite(lat)
+                else float("inf")
+                for s, lat in zip(self.servers, lats)
+            ]
+            choice = int(np.argmin(scores))
         else:
             choice = int(np.argmin(lats))
         if not np.isfinite(lats[choice]):

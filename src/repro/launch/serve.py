@@ -22,6 +22,23 @@ Cell / drain knobs (the multi-cell + time-based-drain serving path):
     wall clock inside the scan carry rather than request count.
     ``--drain-rate 0`` (default) keeps the legacy synchronous drain.
 
+Policies (``--policy``, dispatched through ``core.batch_router``'s
+policy contract — a traceable callable evaluated once per request inside
+the routing scan; see that module's docstring for what a policy callable
+receives and returns):
+  * ``greedy`` (default) — argmin of the eq. 11 latency;
+  * ``load``   — least-loaded server (switch-blind baseline);
+  * ``drain``  — drain-aware greedy: queue backlog discounted by each
+    server's ``drain_rate`` before the eq. 9 pricing, so fast-draining
+    servers keep winning under bursty arrivals;
+  * ``actor:<ckpt_dir>`` — a trained MADDPG-MATO actor restored from a
+    ``core.policies.save_actor_checkpoint`` directory. The policy
+    rebuilds the env's eq. 16 observation from live fleet state per
+    request (``core.policies``); an actor trained at ``num_cells=1``
+    with N servers serves every cell of a ``--cells C --servers N``
+    fleet unchanged. ``benchmarks/policy_serving.py`` trains and saves
+    such a checkpoint under ``benchmarks/results/actor_ckpt``.
+
 Performance knobs (the chunked two-phase commit, see
 ``core.batch_router``): ``--chunk C`` scores C requests per fused
 kernel call and runs the slimmed correction scan between calls
@@ -32,6 +49,10 @@ default from ``$REPRO_ROUTER_BACKEND``).
     python -m repro.launch.serve --requests 64 --servers 3
     python -m repro.launch.serve --requests 256 --servers 4 --cells 4 \
         --drain-rate 50 --arrival-rate 100 --no-execute
+    python -m repro.launch.serve --requests 256 --servers 3 --cells 2 \
+        --drain-rate 20000 --policy drain --no-execute
+    python -m repro.launch.serve --requests 256 --servers 3 --cells 2 \
+        --policy actor:benchmarks/results/actor_ckpt --no-execute
     python -m repro.launch.serve --requests 4096 --servers 64 \
         --chunk 256 --no-execute
 """
@@ -45,7 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, list_archs, reduced
-from repro.core import batch_router
+from repro.core import batch_router, policies
 from repro.core.catalog import build_catalog
 from repro.core.router import CLOUD_CELL, EdgeServer
 from repro.models import lm
@@ -98,6 +119,16 @@ def make_multicell_fleet(n_cells: int, servers_per_cell: int, catalog,
     return fleet
 
 
+def resolve_policy_flag(policy, fleet_params):
+    """CLI policy flag -> ``route_batch`` policy. ``actor:<ckpt_dir>``
+    restores a trained MADDPG-MATO actor through ``core.policies``;
+    everything else passes through (builtin name or callable)."""
+    if isinstance(policy, str) and policy.startswith("actor:"):
+        return policies.load_actor_policy(policy.split(":", 1)[1],
+                                          fleet_params)
+    return policy
+
+
 def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
           gen_tokens=8, n_cells=1, drain_rate=0.0, arrival_rate=100.0,
           chunk=None, backend=None):
@@ -112,6 +143,7 @@ def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
     else:
         fleet = make_fleet(n_servers, catalog, drain_rate=drain_rate)
     fleet_params, fleet_state = batch_router.fleet_from_servers(fleet, catalog)
+    policy = resolve_policy_flag(policy, fleet_params)
 
     # local reduced models actually generate tokens for routed requests
     models = {}
@@ -206,7 +238,10 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=100.0,
                     help="fleet-wide request arrivals per second (drives "
                          "the time-based drain)")
-    ap.add_argument("--policy", default="greedy", choices=["greedy", "load"])
+    ap.add_argument("--policy", default="greedy",
+                    help="greedy | load | drain | actor:<ckpt_dir> (a "
+                         "core.policies actor checkpoint, e.g. the one "
+                         "benchmarks/policy_serving.py trains)")
     ap.add_argument("--chunk", type=int, default=None,
                     help="two-phase commit chunk size (None = single-scan "
                          "path; 256 is a good default at fleet scale)")

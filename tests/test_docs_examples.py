@@ -1,5 +1,6 @@
 """Docs can't silently rot: import-check every example and assert the
-commands/paths quoted in README.md (and the README's table links) exist.
+commands/paths quoted in README.md and docs/serving.md (and their table
+links) exist.
 
 Import is cheap because every example keeps work behind a ``main()``
 guard; actually executing them is the examples' own job (CI tier-2).
@@ -13,6 +14,7 @@ import pytest
 
 REPO = Path(__file__).resolve().parents[1]
 README = (REPO / "README.md").read_text()
+SERVING = (REPO / "docs" / "serving.md").read_text()
 EXAMPLES = sorted((REPO / "examples").glob("*.py"))
 
 
@@ -43,18 +45,18 @@ def _quoted_commands(text):
     return cmds
 
 
-def test_readme_quotes_real_commands():
-    cmds = _quoted_commands(README)
-    assert cmds, "README quotes no runnable commands"
+def _assert_commands_resolve(text, doc_name, needles):
+    cmds = _quoted_commands(text)
+    assert cmds, f"{doc_name} quotes no runnable commands"
     joined = "\n".join(cmds)
-    # the core entry points the README promises must be quoted
-    for needle in ("examples/quickstart.py", "examples/serve_edge.py",
-                   "benchmarks.run", "-m pytest"):
-        assert needle in joined, f"README no longer quotes {needle}"
+    # the core entry points the doc promises must be quoted
+    for needle in needles:
+        assert needle in joined, f"{doc_name} no longer quotes {needle}"
     for cmd in cmds:
         for tok in cmd.split():
             if tok.endswith(".py"):  # quoted script paths must exist
-                assert (REPO / tok).is_file(), f"README quotes missing {tok}"
+                assert (REPO / tok).is_file(), \
+                    f"{doc_name} quotes missing {tok}"
     # quoted `python -m pkg.mod` modules must resolve to real files
     for mod in re.findall(r"-m\s+([\w.]+)", joined):
         if mod == "pytest":
@@ -65,7 +67,48 @@ def test_readme_quotes_real_commands():
             or (root / rel / "__main__.py").is_file()
             for root in (REPO, REPO / "src")
         )
-        assert hit, f"README quotes unresolvable module {mod}"
+        assert hit, f"{doc_name} quotes unresolvable module {mod}"
+
+
+def test_readme_quotes_real_commands():
+    _assert_commands_resolve(
+        README, "README",
+        ("examples/quickstart.py", "examples/serve_edge.py",
+         "benchmarks.run", "benchmarks.policy_serving", "-m pytest",
+         "--policy"),
+    )
+
+
+def test_serving_md_quotes_real_commands():
+    """The serving guide's commands are pinned like the README's: every
+    quoted script/module must exist, and the guide must keep covering
+    the policy flag, the actor-checkpoint form and the policy
+    benchmark."""
+    _assert_commands_resolve(
+        SERVING, "docs/serving.md",
+        ("repro.launch.serve", "benchmarks.policy_serving",
+         "--policy actor:", "--drain-rate", "--chunk"),
+    )
+
+
+def test_serving_md_python_snippets_compile():
+    """Fenced python blocks in the serving guide must at least parse,
+    and every `from repro...` / `import repro...` they quote must
+    resolve to a real module (the train->checkpoint->serve walkthrough
+    can't silently rot)."""
+    blocks = re.findall(r"```python\n(.*?)```", SERVING, re.S)
+    assert blocks, "serving.md lost its python walkthrough"
+    for block in blocks:
+        compile(block, "serving.md", "exec")  # SyntaxError -> test fails
+        for mod in re.findall(r"^\s*(?:from|import)\s+(repro[\w.]*)",
+                              block, re.M):
+            assert importlib.util.find_spec(mod) is not None, \
+                f"serving.md snippet imports unresolvable {mod}"
+
+
+def test_readme_links_serving_guide():
+    assert "docs/serving.md" in re.findall(r"\]\(([^)#`\s]+)\)", README), \
+        "README no longer links the serving guide"
 
 
 def test_readme_links_resolve():
