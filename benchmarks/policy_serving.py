@@ -30,14 +30,15 @@ import pathlib
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import batch_router as br
-from repro.core import costs, maddpg, policies
+from repro.core import maddpg, policies
 from repro.core.catalog import build_catalog, env_params_from_catalog
 from repro.core.router import Request
 from repro.launch.serve import make_multicell_fleet
+from repro.workloads import generators
+from repro.workloads.simulate import mean_request_energy_j
 
 EDGE_ARCHS = ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
 RESULTS = pathlib.Path(__file__).parent / "results"
@@ -95,46 +96,13 @@ def ensure_checkpoint(verbose=True):
 def bursty_stream(rng, n, n_cells, num_models):
     """Bursts of ``BURST`` near-simultaneous requests every
     ``BURST_GAP_S`` seconds, random cells/models — the arrival pattern
-    where queue-drain awareness matters."""
-    burst_idx = np.arange(n) // BURST
-    arrivals = burst_idx * BURST_GAP_S + rng.uniform(0.0, 1e-3, n)
-    arrivals = np.sort(arrivals)
-    return br.RequestBatch(
-        model=jnp.asarray(rng.integers(0, num_models, n), jnp.int32),
-        prompt_bits=jnp.asarray(rng.uniform(1e5, 1e6, n), jnp.float32),
-        gen_tokens=jnp.asarray(rng.integers(8, 128, n), jnp.float32),
-        cell=jnp.asarray(rng.integers(0, n_cells, n), jnp.int32),
-        arrival_s=jnp.asarray(arrivals, jnp.float32),
-    )
-
-
-def mean_energy_j(params, reqs, out, p_tx=0.5, p_bh=2.0, kappa=1e-29):
-    """Per-request serving energy, the eq. 6/8/10 analogue through the
-    ``core.costs`` functions (the single home of the cost arithmetic):
-    uplink transmission + model switch (when the request missed
-    residency) + edge compute (kappa * f^2 * work/f), averaged over
-    completed requests."""
-    choice = np.asarray(out.choice)
-    ok = choice >= 0
-    ch = np.maximum(choice, 0)
-    model = np.asarray(reqs.model)
-    flops = np.asarray(params.flops_per_s)[ch]
-    t_trans = costs.trans_latency(
-        np.asarray(reqs.prompt_bits), 1.0, np.asarray(params.uplink_bps)[ch]
-    )
-    t_switch = np.where(
-        np.asarray(out.hit), 0.0,
-        costs.switch_latency(np.asarray(params.size_bits)[model],
-                             np.asarray(params.backhaul_bps)[ch]),
-    )
-    work = (np.asarray(reqs.gen_tokens)
-            * np.asarray(params.decode_flops_per_token)[model])
-    e = costs.edge_total_energy(
-        costs.trans_energy(p_tx, t_trans),
-        costs.switch_energy(p_bh, t_switch),
-        kappa * flops**2 * (work / flops),
-    )
-    return float(np.where(ok, np.asarray(e), 0.0).sum() / max(ok.sum(), 1))
+    where queue-drain awareness matters. Built from the
+    ``workloads.generators`` primitives, consuming ``rng`` in the
+    canonical order the original hand-rolled fixture did, so the
+    recorded BENCH_policy.json metrics are unchanged."""
+    arrivals = generators.burst_train_arrivals(rng, n, BURST, BURST_GAP_S)
+    fields = generators.stream_fields(rng, n, num_models, num_cells=n_cells)
+    return generators.to_request_batch(fields, arrivals)
 
 
 def route_with(policy, fleet, catalog, params, state, reqs, repeats=3):
@@ -147,7 +115,8 @@ def route_with(policy, fleet, catalog, params, state, reqs, repeats=3):
         _, out = br.route_batch(params, state, reqs, policy=policy)
         jax.block_until_ready(out.choice)
         best = min(best, time.perf_counter() - t0)
-    s = br.stats(out)
+    # the cloud column is appended last by make_multicell_fleet
+    s = br.stats(out, cloud_index=np.asarray(params.flops_per_s).shape[0] - 1)
     # fair-fight latency: reprice the stream under the drain-corrected
     # cost model (raw eq. 11 is greedy's own objective and overstates
     # the wait behind fast-draining queues)
@@ -162,11 +131,7 @@ def route_with(policy, fleet, catalog, params, state, reqs, repeats=3):
         policies.drain_corrected_latencies(fleet, catalog, requests,
                                            np.asarray(out.choice))
     ))
-    s["mean_energy_j"] = mean_energy_j(params, reqs, out)
-    n = np.asarray(params.flops_per_s).shape[0]
-    s["cloud_fallback_rate"] = float(
-        np.mean(np.asarray(out.choice) == n - 1)  # cloud column is last
-    )
+    s["mean_energy_j"] = mean_request_energy_j(params, reqs, out)
     s["route_s"] = round(best, 4)
     s["req_per_s"] = round(reqs.model.shape[0] / best)
     return s, out

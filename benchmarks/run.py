@@ -1,14 +1,19 @@
 """Benchmark entry point: one section per paper table/figure + the
 framework's own microbenchmarks + the roofline summary.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --list     # registered sections
+    PYTHONPATH=src python -m benchmarks.run --only router,scenarios
 
 CSV convention per scaffold: ``name,us_per_call,derived``.
 Paper-figure sections read the cached training results in
 ``benchmarks/results/`` (populate with ``python -m benchmarks.populate``).
+Every section is registered in ``SECTIONS`` — CI smoke-checks the
+registration via ``--list`` so new benchmarks can't silently drop out.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -128,6 +133,15 @@ def bench_policy_serving():
     policy_serving.main(header=False)
 
 
+def bench_scenarios():
+    """Policies x scenarios matrix through the long-horizon workload
+    simulator (repro.workloads); refreshes benchmarks/
+    BENCH_scenarios.json."""
+    from benchmarks import scenario_suite
+
+    scenario_suite.main(header=False)
+
+
 def bench_train_step():
     from repro.configs import get_arch, reduced
     from repro.data import pipeline
@@ -187,19 +201,49 @@ def faithful_table():
         print(f"(skipped: {e})")
 
 
-def main() -> None:
+#: Registered sections, run order. CI pins this registry via ``--list``.
+SECTIONS = [
+    ("env_step", bench_env_step),
+    ("maddpg_update", bench_maddpg_update),
+    ("kernels", bench_kernels),
+    ("score_kernel", bench_score_kernel),
+    ("router", bench_router),
+    ("multicell", bench_multicell),
+    ("policy_serving", bench_policy_serving),
+    ("scenarios", bench_scenarios),
+    ("train_step", bench_train_step),
+    ("paper_tables", paper_tables),
+    ("faithful", faithful_table),
+    ("roofline", roofline_table),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--list", action="store_true",
+                    help="print registered sections and exit (CI smoke)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of sections to run")
+    args = ap.parse_args(argv)
+    if args.list:
+        for name, fn in SECTIONS:
+            doc = (fn.__doc__ or "").strip().splitlines() or [""]
+            print(f"{name}: {doc[0]}")
+        return
+    selected = dict(SECTIONS)
+    if args.only is not None:
+        missing = [n for n in args.only.split(",") if n not in selected]
+        if missing:
+            raise SystemExit(
+                f"unknown sections {missing}; see --list"
+            )
+        keep = set(args.only.split(","))
+        sections = [(n, f) for n, f in SECTIONS if n in keep]
+    else:
+        sections = SECTIONS
     print("name,us_per_call,derived")
-    bench_env_step()
-    bench_maddpg_update()
-    bench_kernels()
-    bench_score_kernel()
-    bench_router()
-    bench_multicell()
-    bench_policy_serving()
-    bench_train_step()
-    paper_tables()
-    faithful_table()
-    roofline_table()
+    for _, fn in sections:
+        fn()
 
 
 if __name__ == "__main__":

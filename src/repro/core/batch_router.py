@@ -831,14 +831,17 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     return carry, (choice, latency, hit)
 
 
-def stats(outcome: RouteOutcome) -> dict:
+def stats(outcome: RouteOutcome, *, cloud_index: Optional[int] = None) -> dict:
     """Fleet-level summary of one routed batch.
 
     Rejected requests (``choice == -1``, ``inf`` latency) would poison
     the latency mean, so they are masked out of ``mean_latency`` and
     reported separately as ``completion_rate`` — the fraction of
     requests that found a feasible server (the paper's third headline
-    metric alongside latency and hit rate).
+    metric alongside latency and hit rate). ``cloud_index`` — the cloud
+    column's server index (conventionally the last) — adds the
+    ``cloud_fallback_rate``, so call sites stop re-deriving it from raw
+    choices.
     """
     ok = outcome.choice >= 0
     n_ok = jnp.maximum(ok.sum(), 1)
@@ -847,8 +850,58 @@ def stats(outcome: RouteOutcome) -> dict:
         jnp.where(ok, outcome.latency, 0.0).sum() / n_ok,
         jnp.inf,
     )
-    return {
+    out = {
         "mean_latency": float(mean_lat),
         "residency_hit_rate": float(outcome.hit.mean()),
         "completion_rate": float(ok.mean()),
     }
+    if cloud_index is not None:
+        out["cloud_fallback_rate"] = float(
+            (outcome.choice == cloud_index).mean()
+        )
+    return out
+
+
+def window_stats(outcome: RouteOutcome, window_id, num_windows: int, *,
+                 cloud_index: Optional[int] = None,
+                 completed_means: Optional[dict] = None) -> dict:
+    """Per-window ``stats`` over one routed stream: the same rejection
+    masking, applied ONCE for all windows, so time-series aggregation
+    (``workloads.simulate``) doesn't re-mask per call site.
+
+    ``window_id`` assigns each request to a window in ``[0,
+    num_windows)`` — any segmentation works (request-count chunks, wall-
+    clock buckets). Returns ``(num_windows,)`` numpy arrays; a window
+    with no completed requests reports ``inf`` mean latency, an empty
+    window zero rates. ``completed_means`` adds extra columns: each
+    ``name -> (B,)`` per-request value is averaged over the window's
+    COMPLETED requests (values at rejected requests must already be
+    zero — e.g. ``workloads.simulate.request_energy_j``)."""
+    wid = np.asarray(window_id)
+    choice = np.asarray(outcome.choice)
+    ok = choice >= 0
+    count = np.bincount(wid, minlength=num_windows).astype(float)
+    n_ok = np.bincount(wid, weights=ok, minlength=num_windows)
+    lat_sum = np.bincount(
+        wid, weights=np.where(ok, np.asarray(outcome.latency), 0.0),
+        minlength=num_windows,
+    )
+    hits = np.bincount(wid, weights=np.asarray(outcome.hit),
+                       minlength=num_windows)
+    denom = np.maximum(count, 1.0)
+    denom_ok = np.maximum(n_ok, 1.0)
+    out = {
+        "requests": count.astype(np.int64),
+        "mean_latency": np.where(n_ok > 0, lat_sum / denom_ok, np.inf),
+        "completion_rate": n_ok / denom,
+        "residency_hit_rate": hits / denom,
+    }
+    if cloud_index is not None:
+        out["cloud_fallback_rate"] = np.bincount(
+            wid, weights=(choice == cloud_index), minlength=num_windows
+        ) / denom
+    for name, vals in (completed_means or {}).items():
+        out[name] = np.bincount(
+            wid, weights=np.asarray(vals), minlength=num_windows
+        ) / denom_ok
+    return out

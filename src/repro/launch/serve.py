@@ -9,18 +9,28 @@ Wires the paper's scheduling layer to the real model plane:
   * actual prefill+decode of the routed batch through ``models.lm`` on
     the local device (reduced configs on CPU).
 
+Workload (the scenario subsystem, ``repro.workloads``):
+  * ``--scenario NAME`` picks a registered traffic shape (``steady``,
+    ``bursty``, ``diurnal``, ``flash-crowd``, ``popularity-drift``,
+    ``hotspot-cell`` — see ``docs/scenarios.md``); the whole stream
+    (arrival stamps, model popularity, cells, prompt sizes) is compiled
+    from ``(ScenarioSpec, --seed)`` by ``workloads.compile_scenario``,
+    so serve runs are reproducible end to end.
+  * ``--arrival-rate R`` overrides the scenario's base rate (req/s
+    fleet-wide); ``--seed`` reseeds the stream.
+
 Cell / drain knobs (the multi-cell + time-based-drain serving path):
   * ``--cells C`` partitions the fleet into C edge cells of
     ``--servers`` servers each, plus ONE cloud-fallback server
     (``make_cloud_server``) in the reserved ``CLOUD_CELL`` that every
-    request can reach at backhaul-folded uplink pricing. Requests are
-    tagged with a uniformly random cell and the whole C-cell fleet is
-    still routed in a single jitted call (block-diagonal score mask).
+    request can reach at backhaul-folded uplink pricing. Requests carry
+    the scenario's cell column and the whole C-cell fleet is still
+    routed in a single jitted call (block-diagonal score mask).
   * ``--drain-rate R`` gives every edge server R tokens/sec of
-    continuous queue drain; requests then carry Poisson-ish arrival
-    stamps (``--arrival-rate`` req/s fleet-wide) and queue decay tracks
-    wall clock inside the scan carry rather than request count.
-    ``--drain-rate 0`` (default) keeps the legacy synchronous drain.
+    continuous queue drain; queue decay then tracks the scenario's
+    wall-clock arrival stamps inside the scan carry rather than request
+    count. ``--drain-rate 0`` (default) keeps the legacy synchronous
+    drain.
 
 Policies (``--policy``, dispatched through ``core.batch_router``'s
 policy contract — a traceable callable evaluated once per request inside
@@ -49,6 +59,8 @@ default from ``$REPRO_ROUTER_BACKEND``).
     python -m repro.launch.serve --requests 64 --servers 3
     python -m repro.launch.serve --requests 256 --servers 4 --cells 4 \
         --drain-rate 50 --arrival-rate 100 --no-execute
+    python -m repro.launch.serve --requests 1024 --servers 3 --cells 2 \
+        --scenario popularity-drift --seed 7 --drain-rate 20000 --no-execute
     python -m repro.launch.serve --requests 256 --servers 3 --cells 2 \
         --drain-rate 20000 --policy drain --no-execute
     python -m repro.launch.serve --requests 256 --servers 3 --cells 2 \
@@ -70,6 +82,7 @@ from repro.core import batch_router, policies
 from repro.core.catalog import build_catalog
 from repro.core.router import CLOUD_CELL, EdgeServer
 from repro.models import lm
+from repro.workloads import compile_scenario, get_scenario, list_scenarios
 
 
 def make_fleet(n_servers: int, catalog, flops=197e12, slots=2, cell=0,
@@ -130,9 +143,8 @@ def resolve_policy_flag(policy, fleet_params):
 
 
 def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
-          gen_tokens=8, n_cells=1, drain_rate=0.0, arrival_rate=100.0,
-          chunk=None, backend=None):
-    rng = np.random.default_rng(seed)
+          gen_tokens=8, n_cells=1, drain_rate=0.0, arrival_rate=None,
+          chunk=None, backend=None, scenario="steady"):
     # serve the edge-suitable (small) members of the catalogue
     edge_archs = ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
     catalog = build_catalog(edge_archs)
@@ -152,25 +164,15 @@ def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
             cfg = reduced(get_arch(e.name))
             models[e.index] = (cfg, lm.init_params(jax.random.key(e.index), cfg))
 
-    # Poisson-process arrival stamps drive the time-based drain
-    arrivals = (
-        jnp.asarray(
-            np.cumsum(rng.exponential(1.0 / arrival_rate, num_requests)),
-            jnp.float32,
-        )
-        if drain_rate > 0.0
-        else None
-    )
-    reqs = batch_router.RequestBatch(
-        model=jnp.asarray(rng.integers(0, len(catalog), num_requests), jnp.int32),
-        prompt_bits=jnp.asarray(rng.uniform(1e5, 1e6, num_requests), jnp.float32),
-        gen_tokens=jnp.full((num_requests,), gen_tokens, jnp.float32),
-        cell=(
-            jnp.asarray(rng.integers(0, n_cells, num_requests), jnp.int32)
-            if multicell else None
-        ),
-        arrival_s=arrivals,
-    )
+    # the whole stream — arrival stamps, model popularity, cells, prompt
+    # sizes — compiles from (ScenarioSpec, seed): reproducible end to end
+    spec = get_scenario(scenario, num_requests=num_requests)
+    if arrival_rate is not None:
+        spec = spec._replace(rate=arrival_rate)
+    if gen_tokens is not None:  # None: keep the scenario's length range
+        spec = spec._replace(gen_tokens=(gen_tokens, gen_tokens))
+    reqs = compile_scenario(spec, seed=seed, num_models=len(catalog),
+                            num_cells=n_cells)
 
     # route the WHOLE batch (all cells) in one jitted call
     # (sequential-commit scan). With drain_rate > 0 the queues decay by
@@ -180,15 +182,18 @@ def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
     fleet_state, out = batch_router.route_batch(
         fleet_params, fleet_state, reqs,
         None if drain_rate > 0.0
-        else gen_tokens * len(fleet) / max(num_requests, 1),
+        else float(np.mean(np.asarray(reqs.gen_tokens))) * len(fleet)
+        / max(num_requests, 1),
         policy=policy, chunk=chunk, backend=backend,
     )
     jax.block_until_ready(out.choice)
     route_s = time.time() - t0
 
     if execute:
-        for model_idx in np.asarray(reqs.model):
+        gen_counts = np.asarray(reqs.gen_tokens).astype(int)
+        for model_idx, n_gen in zip(np.asarray(reqs.model), gen_counts):
             cfg, params = models[int(model_idx)]
+            n_gen = int(n_gen)
             B, P = 1, 8
             if cfg.modality == "audio":
                 prompt = jnp.zeros((B, P, cfg.num_codebooks), jnp.int32)
@@ -196,7 +201,7 @@ def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
                 prompt = jnp.zeros((B, P), jnp.int32)
             ids, _, cache = lm.prefill(params, prompt, cfg)
             # token-by-token generation against a fresh full cache
-            full = lm.init_cache(cfg, B, P + gen_tokens)
+            full = lm.init_cache(cfg, B, P + n_gen)
 
             def seat(dst, src):
                 if src.shape == dst.shape:
@@ -206,22 +211,22 @@ def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
 
             cache = jax.tree.map(seat, full, cache)
             tok = ids[:, -1:]
-            for t in range(gen_tokens):
+            for t in range(n_gen):
                 tok, _, cache = lm.decode_step(
                     params, cache, tok, jnp.int32(P + t), cfg
                 )
 
-    stats = batch_router.stats(out)
+    # the cloud column is appended last when the fleet is multicell
+    stats = batch_router.stats(
+        out, cloud_index=len(fleet) - 1 if multicell else None
+    )
     stats["route_s"] = route_s
     stats["wall_s"] = time.time() - t0
     stats["requests"] = num_requests
     stats["cells"] = n_cells
     stats["servers"] = len(fleet)
-    if multicell:
-        cloud = len(fleet) - 1  # the cloud column is appended last
-        stats["cloud_fallback_rate"] = float(
-            np.mean(np.asarray(out.choice) == cloud)
-        )
+    stats["scenario"] = spec.name
+    stats["seed"] = seed
     return stats
 
 
@@ -235,9 +240,20 @@ def main():
     ap.add_argument("--drain-rate", type=float, default=0.0,
                     help="tokens/sec continuous queue drain (0 = legacy "
                          "synchronous per-request drain)")
-    ap.add_argument("--arrival-rate", type=float, default=100.0,
-                    help="fleet-wide request arrivals per second (drives "
-                         "the time-based drain)")
+    ap.add_argument("--scenario", default="steady", choices=list_scenarios(),
+                    help="registered workload shape compiled into the "
+                         "request stream (see docs/scenarios.md)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="stream seed: the same (scenario, seed) "
+                         "regenerates the stream bit-identically")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="override the scenario's base arrival rate "
+                         "(req/s fleet-wide)")
+    ap.add_argument("--gen-tokens", type=int, default=8,
+                    help="constant generation length (default 8, matching "
+                         "the Python API); pass 0 to serve the scenario's "
+                         "[lo, hi) length range instead (execute time "
+                         "scales with the token count)")
     ap.add_argument("--policy", default="greedy",
                     help="greedy | load | drain | actor:<ckpt_dir> (a "
                          "core.policies actor checkpoint, e.g. the one "
@@ -253,9 +269,12 @@ def main():
                     help="route only (no local generation)")
     args = ap.parse_args()
     stats = serve(args.requests, args.servers, args.policy,
-                  execute=not args.no_execute, n_cells=args.cells,
-                  drain_rate=args.drain_rate, arrival_rate=args.arrival_rate,
-                  chunk=args.chunk, backend=args.backend)
+                  execute=not args.no_execute, seed=args.seed,
+                  gen_tokens=args.gen_tokens if args.gen_tokens > 0 else None,
+                  n_cells=args.cells,
+                  drain_rate=args.drain_rate,
+                  arrival_rate=args.arrival_rate, chunk=args.chunk,
+                  backend=args.backend, scenario=args.scenario)
     for k, v in stats.items():
         print(f"{k}: {v}")
 

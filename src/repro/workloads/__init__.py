@@ -1,0 +1,31 @@
+"""Scenario workload subsystem: generated IIoT traffic + long-horizon
+serving simulation.
+
+Three modules, one pipeline:
+
+  * :mod:`repro.workloads.generators` — composable, RNG-keyed traffic
+    primitives (arrival processes, popularity distributions, per-cell
+    skew, length distributions). Every stream regenerates bit-identically
+    from ``(spec, seed)``.
+  * :mod:`repro.workloads.scenario` — the declarative ``ScenarioSpec``
+    pytree plus the registry of named scenarios (``steady``, ``bursty``,
+    ``diurnal``, ``flash-crowd``, ``popularity-drift``,
+    ``hotspot-cell``); ``compile_scenario`` turns a spec into a
+    ``core.batch_router.RequestBatch`` for any fleet topology.
+  * :mod:`repro.workloads.simulate` — the long-horizon episode runner:
+    windows an arbitrarily long stream into chunked ``route_batch``
+    calls, carries ``FleetState`` across windows and aggregates
+    per-window time series.
+
+``launch/serve.py --scenario <name>`` and
+``benchmarks/scenario_suite.py`` (the policies x scenarios matrix)
+drive it end to end; ``docs/scenarios.md`` is the guide.
+"""
+from repro.workloads.scenario import (  # noqa: F401
+    ScenarioSpec,
+    compile_scenario,
+    get_scenario,
+    list_scenarios,
+    register,
+)
+from repro.workloads.simulate import SimResult, simulate  # noqa: F401

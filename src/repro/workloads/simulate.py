@@ -1,0 +1,165 @@
+"""Long-horizon serving simulator: an arbitrarily long request stream
+windowed into chunked ``route_batch`` calls.
+
+``route_batch`` already owns the semantics (sequential commit, cell
+mask, time-based drain); the simulator's job is the EPISODE: it slices
+the stream into fixed-size request windows, routes each window with the
+``FleetState`` carried from the previous one (LRU residency, queues,
+``time_s`` — nothing resets between windows), and aggregates a
+per-window time series on top of the concatenated outcome
+(``core.batch_router.window_stats``) plus queue-depth percentiles
+sampled at every window boundary — the only instants the queues are
+observable from outside the jitted call.
+
+Because the scan commits requests strictly in stream order, windowing
+is a pure re-chunking: for a drain-free stream the W-window episode
+bit-matches ONE ``route_batch`` call on the whole stream (choices,
+latencies, final state — pinned by ``tests/test_workloads.py``).
+Fixed-size windows also keep the jit cache small: every window shares
+one compiled program (+1 for a ragged tail).
+
+``benchmarks/scenario_suite.py`` runs this over the full policies x
+scenarios matrix; ``examples/serve_edge.py`` prints one time series.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch_router as br
+from repro.core import costs
+
+
+def request_energy_j(params: br.FleetParams, reqs: br.RequestBatch,
+                     outcome: br.RouteOutcome, *, p_tx: float = 0.5,
+                     p_bh: float = 2.0, kappa: float = 1e-29) -> np.ndarray:
+    """Per-request serving energy (J), the eq. 6/8/10 analogue through
+    the ``core.costs`` functions (the single home of the cost
+    arithmetic): uplink transmission + model switch (when the request
+    missed residency) + edge compute (``kappa * f^2 * work/f``). Zero
+    for rejected requests. The shared metric under
+    ``benchmarks/policy_serving.py`` and the per-window series here."""
+    choice = np.asarray(outcome.choice)
+    ok = choice >= 0
+    ch = np.maximum(choice, 0)
+    model = np.asarray(reqs.model)
+    flops = np.asarray(params.flops_per_s)[ch]
+    t_trans = costs.trans_latency(
+        np.asarray(reqs.prompt_bits), 1.0, np.asarray(params.uplink_bps)[ch]
+    )
+    t_switch = np.where(
+        np.asarray(outcome.hit), 0.0,
+        costs.switch_latency(np.asarray(params.size_bits)[model],
+                             np.asarray(params.backhaul_bps)[ch]),
+    )
+    work = (np.asarray(reqs.gen_tokens)
+            * np.asarray(params.decode_flops_per_token)[model])
+    e = costs.edge_total_energy(
+        costs.trans_energy(p_tx, t_trans),
+        costs.switch_energy(p_bh, t_switch),
+        kappa * flops**2 * (work / flops),
+    )
+    return np.where(ok, np.asarray(e), 0.0)
+
+
+def mean_request_energy_j(params: br.FleetParams, reqs: br.RequestBatch,
+                          outcome: br.RouteOutcome, **kw) -> float:
+    """Mean eq. 6/8/10 serving energy over COMPLETED requests — the
+    aggregate both ``benchmarks/policy_serving.py`` and
+    ``benchmarks/scenario_suite.py`` record."""
+    ok = np.asarray(outcome.choice) >= 0
+    return float(request_energy_j(params, reqs, outcome, **kw).sum()
+                 / max(ok.sum(), 1))
+
+
+class SimResult(NamedTuple):
+    """Per-window time series of one simulated episode (arrays of length
+    W = number of windows). Latency/completion/hit/cloud come from
+    ``batch_router.window_stats``; the queue percentiles are over the
+    EDGE servers' outstanding tokens at each window's end (the cloud
+    column, when present, is excluded — its depth only dilutes the edge
+    signal)."""
+
+    window_start_s: np.ndarray    # first arrival in the window
+    window_end_s: np.ndarray      # last arrival in the window
+    requests: np.ndarray          # (W,) int — window sizes
+    mean_latency: np.ndarray      # completed requests only
+    mean_energy_j: np.ndarray     # completed requests only (eq. 6/8/10)
+    completion_rate: np.ndarray
+    residency_hit_rate: np.ndarray
+    cloud_fallback_rate: Optional[np.ndarray]  # None without a cloud column
+    queue_p50: np.ndarray         # edge queue depth percentiles at window end
+    queue_p90: np.ndarray
+    queue_max: np.ndarray
+
+
+def simulate(params: br.FleetParams, state: br.FleetState,
+             reqs: br.RequestBatch, *, policy="greedy", actor=None,
+             window_requests: int = 256, drain_tokens=None,
+             chunk: Optional[int] = None, unroll: int = 8,
+             backend: Optional[str] = None,
+             cloud_index: Optional[int] = None):
+    """Route ``reqs`` through W sequential windows, carrying the fleet
+    state across window boundaries; returns ``(state, outcome, series)``
+    with ``outcome`` the concatenated ``RouteOutcome`` of the whole
+    stream and ``series`` the per-window ``SimResult``.
+
+    All ``route_batch`` knobs pass through (``policy``/``actor``,
+    ``chunk``/``unroll``/``backend``, per-request ``drain_tokens``);
+    ``cloud_index`` (the cloud column's server index, conventionally the
+    last) adds the cloud-fallback rate to the series and excludes that
+    column from the queue percentiles."""
+    b = int(reqs.model.shape[0])
+    w = max(1, int(window_requests))
+    n_windows = max(1, math.ceil(b / w))
+    outs, q50, q90, qmax = [], [], [], []
+    for i in range(n_windows):
+        sl = slice(i * w, min((i + 1) * w, b))
+        win = jax.tree.map(lambda x: x[sl], reqs)
+        dw = drain_tokens
+        if dw is not None and np.ndim(dw) == 1:
+            dw = dw[sl]
+        state, out = br.route_batch(params, state, win, dw, policy=policy,
+                                    actor=actor, chunk=chunk, unroll=unroll,
+                                    backend=backend)
+        outs.append(out)
+        q = np.asarray(state.queue_tokens)
+        if cloud_index is not None:
+            q = np.delete(q, cloud_index)
+        q50.append(np.percentile(q, 50))
+        q90.append(np.percentile(q, 90))
+        qmax.append(q.max())
+
+    outcome = br.RouteOutcome(
+        *(jnp.concatenate([getattr(o, f) for o in outs])
+          for f in br.RouteOutcome._fields)
+    )
+    window_id = np.arange(b) // w
+    stats = br.window_stats(
+        outcome, window_id, n_windows, cloud_index=cloud_index,
+        completed_means={
+            "mean_energy_j": request_energy_j(params, reqs, outcome)
+        },
+    )
+    if reqs.arrival_s is not None:
+        arr = np.asarray(reqs.arrival_s)
+    else:  # no wall clock: use request indices as the time axis
+        arr = np.arange(b, dtype=float)
+    t0 = np.minimum.reduceat(arr, np.arange(0, b, w))
+    t1 = np.maximum.reduceat(arr, np.arange(0, b, w))
+    series = SimResult(
+        window_start_s=t0, window_end_s=t1,
+        requests=stats["requests"],
+        mean_latency=stats["mean_latency"],
+        mean_energy_j=stats["mean_energy_j"],
+        completion_rate=stats["completion_rate"],
+        residency_hit_rate=stats["residency_hit_rate"],
+        cloud_fallback_rate=stats.get("cloud_fallback_rate"),
+        queue_p50=np.asarray(q50), queue_p90=np.asarray(q90),
+        queue_max=np.asarray(qmax),
+    )
+    return state, outcome, series

@@ -15,6 +15,7 @@ import pytest
 REPO = Path(__file__).resolve().parents[1]
 README = (REPO / "README.md").read_text()
 SERVING = (REPO / "docs" / "serving.md").read_text()
+SCENARIOS = (REPO / "docs" / "scenarios.md").read_text()
 EXAMPLES = sorted((REPO / "examples").glob("*.py"))
 
 
@@ -74,9 +75,37 @@ def test_readme_quotes_real_commands():
     _assert_commands_resolve(
         README, "README",
         ("examples/quickstart.py", "examples/serve_edge.py",
-         "benchmarks.run", "benchmarks.policy_serving", "-m pytest",
-         "--policy"),
+         "benchmarks.run", "benchmarks.policy_serving",
+         "benchmarks.scenario_suite", "-m pytest",
+         "--policy", "--scenario"),
     )
+
+
+def test_scenarios_md_quotes_real_commands():
+    """The scenario guide is pinned like the serving guide: quoted
+    scripts/modules must exist and it must keep covering the serve
+    scenario flag and the matrix benchmark."""
+    _assert_commands_resolve(
+        SCENARIOS, "docs/scenarios.md",
+        ("repro.launch.serve", "benchmarks.scenario_suite",
+         "--scenario", "--seed"),
+    )
+
+
+def test_scenarios_md_python_snippets_compile():
+    blocks = re.findall(r"```python\n(.*?)```", SCENARIOS, re.S)
+    assert blocks, "scenarios.md lost its python walkthrough"
+    for block in blocks:
+        compile(block, "scenarios.md", "exec")
+        for mod in re.findall(r"^\s*(?:from|import)\s+(repro[\w.]*)",
+                              block, re.M):
+            assert importlib.util.find_spec(mod) is not None, \
+                f"scenarios.md snippet imports unresolvable {mod}"
+
+
+def test_readme_links_scenarios_guide():
+    assert "docs/scenarios.md" in re.findall(r"\]\(([^)#`\s]+)\)", README), \
+        "README no longer links the scenario guide"
 
 
 def test_serving_md_quotes_real_commands():
