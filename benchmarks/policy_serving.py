@@ -53,6 +53,9 @@ BURST = 64            # requests per burst (arrive nearly simultaneously)
 BURST_GAP_S = 0.5     # quiet gap between bursts (queues drain here)
 DRAIN_RATE = 3e4      # tokens/sec — comparable to the servers' decode
                       # throughput, so drain-aware pricing actually bites
+ACTOR_CHUNK = 1024    # chunked-path chunk for the batched actor: one
+                      # chunk = one MLP gemm over the whole stream
+ACTOR_UNROLL = 4      # scan unroll for the hooked (table-lookup) chunk body
 
 # short-budget training run that produces the served checkpoint
 TRAIN = dict(total_steps=600, batch_size=128, warmup=200, update_every=5,
@@ -105,16 +108,38 @@ def bursty_stream(rng, n, n_cells, num_models):
     return generators.to_request_batch(fields, arrivals)
 
 
-def route_with(policy, fleet, catalog, params, state, reqs, repeats=3):
-    """Route the stream under one policy; returns (stats dict, outcome)."""
-    _, out = br.route_batch(params, state, reqs, policy=policy)  # compile
-    jax.block_until_ready(out.choice)
-    best = float("inf")
+def time_policies(specs, params, state, reqs, repeats=9):
+    """Interleaved best-of wall-clock per policy: each timing round runs
+    every policy once before any policy runs again, so process-wide slow
+    phases (GC pauses, frequency drift) tax all competitors equally
+    instead of whichever happened to be measured first. Returns
+    {name: best seconds}."""
+    runners = {}
+    for name, policy, kw in specs:
+        def run(policy=policy, kw=kw):
+            _, out = br.route_batch(params, state, reqs, policy=policy,
+                                    **kw)
+            jax.block_until_ready(out.choice)
+        run()  # compile + warm
+        runners[name] = run
+    best = {name: float("inf") for name in runners}
     for _ in range(repeats):
-        t0 = time.perf_counter()
-        _, out = br.route_batch(params, state, reqs, policy=policy)
-        jax.block_until_ready(out.choice)
-        best = min(best, time.perf_counter() - t0)
+        for name, run in runners.items():
+            t0 = time.perf_counter()
+            run()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return best
+
+
+def route_with(policy, fleet, catalog, params, state, reqs, route_s,
+               **route_kw):
+    """Route the stream under one policy; returns (stats dict, outcome).
+    ``route_s`` is the policy's wall-clock from ``time_policies`` (this
+    call routes once more, for the quality metrics only)."""
+    _, out = br.route_batch(params, state, reqs, policy=policy,
+                            **route_kw)
+    jax.block_until_ready(out.choice)
+    best = route_s
     # the cloud column is appended last by make_multicell_fleet
     s = br.stats(out, cloud_index=np.asarray(params.flops_per_s).shape[0] - 1)
     # fair-fight latency: reprice the stream under the drain-corrected
@@ -150,9 +175,19 @@ def main(emit_json=True, header=True, verbose=True):
 
     actor_policy = policies.load_actor_policy(ckpt_dir, params)
     results = {}
-    for name, policy in [("greedy", "greedy"), ("drain", "drain"),
-                         ("actor", actor_policy)]:
-        s, _ = route_with(policy, fleet, catalog, params, state, reqs)
+    # the actor routes through the chunked path: its chunk-level hook
+    # batches the MLP over ACTOR_CHUNK requests per compat-variant table
+    # (see core.policies.make_actor_policy) instead of one matvec per
+    # request inside the scan. Decisions are identical either way.
+    specs = [("greedy", "greedy", {}),
+             ("drain", "drain", {}),
+             ("actor", actor_policy,
+              {"chunk": ACTOR_CHUNK, "unroll": ACTOR_UNROLL}),
+             ("actor_unbatched", actor_policy, {})]
+    timings = time_policies(specs, params, state, reqs)
+    for name, policy, kw in specs[:3]:
+        s, _ = route_with(policy, fleet, catalog, params, state, reqs,
+                          timings[name], **kw)
         results[name] = s
         print(
             f"policy_{name}_c{CELLS}_n{SERVERS_PER_CELL}_b{REQUESTS},"
@@ -164,6 +199,14 @@ def main(emit_json=True, header=True, verbose=True):
             f";hit_rate={s['residency_hit_rate']:.3f}"
             f";cloud={s['cloud_fallback_rate']:.3f}"
         )
+    results["actor"]["chunk"] = ACTOR_CHUNK
+    results["actor"]["req_per_s_unbatched"] = round(
+        REQUESTS / timings["actor_unbatched"])
+    results["actor"]["batched_speedup"] = round(
+        results["actor"]["req_per_s"]
+        / results["actor"]["req_per_s_unbatched"], 2)
+    results["actor"]["gap_to_greedy"] = round(
+        results["greedy"]["req_per_s"] / results["actor"]["req_per_s"], 2)
 
     if emit_json:
         payload = {

@@ -3,7 +3,8 @@ framework's own microbenchmarks + the roofline summary.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --list     # registered sections
-    PYTHONPATH=src python -m benchmarks.run --only router,scenarios
+    PYTHONPATH=src python -m benchmarks.run --only router_throughput,scenarios
+    PYTHONPATH=src python -m benchmarks.run --only router_throughput --smoke
 
 CSV convention per scaffold: ``name,us_per_call,derived``.
 Paper-figure sections read the cached training results in
@@ -94,12 +95,16 @@ def bench_kernels():
     print(f"rmsnorm_4096x2048,{us:.1f},gb_per_s={gb * 1e6 / us:.1f}")
 
 
-def bench_router():
-    """Fleet-scale routing: scalar oracle vs jitted scan vs chunked
-    two-phase commit (incl. the N=64 B=4096 acceptance cell, which
-    refreshes benchmarks/BENCH_router.json)."""
+def bench_router_throughput(smoke=False):
+    """Fleet-scale routing: scalar oracle vs scan vs chunked vs the
+    speculative parallel commit (incl. the N=64 B=4096 acceptance cell,
+    which refreshes benchmarks/BENCH_router.json). With --smoke, a
+    tiny-shape pass that exercises every path (no timing, no JSON)."""
     from benchmarks import router_throughput
 
+    if smoke:
+        router_throughput.main(header=False, smoke=True)
+        return
     # one representative cell per size regime; the full sweep is
     # ``python -m benchmarks.router_throughput``
     router_throughput.main(fleet_sizes=(16, 64), batch_sizes=(1024, 4096),
@@ -111,6 +116,15 @@ def bench_score_kernel():
     from benchmarks import score_kernel
 
     score_kernel.main(shapes=((4096, 64),), header=False)
+
+
+def bench_score_roofline():
+    """Roofline terms (+ TPU timing when on TPU) for the route-score
+    kernel at B >= 64k, where the (B, N) panel exceeds VMEM; refreshes
+    benchmarks/BENCH_score_roofline.json."""
+    from benchmarks import score_roofline
+
+    score_roofline.main(header=False)
 
 
 def bench_multicell():
@@ -207,7 +221,8 @@ SECTIONS = [
     ("maddpg_update", bench_maddpg_update),
     ("kernels", bench_kernels),
     ("score_kernel", bench_score_kernel),
-    ("router", bench_router),
+    ("score_roofline", bench_score_roofline),
+    ("router_throughput", bench_router_throughput),
     ("multicell", bench_multicell),
     ("policy_serving", bench_policy_serving),
     ("scenarios", bench_scenarios),
@@ -224,6 +239,9 @@ def main(argv=None) -> None:
                     help="print registered sections and exit (CI smoke)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of sections to run")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape pass for sections that support it "
+                         "(exercised, not timed; no BENCH files rewritten)")
     args = ap.parse_args(argv)
     if args.list:
         for name, fn in SECTIONS:
@@ -243,7 +261,10 @@ def main(argv=None) -> None:
         sections = SECTIONS
     print("name,us_per_call,derived")
     for _, fn in sections:
-        fn()
+        if args.smoke and "smoke" in fn.__code__.co_varnames:
+            fn(smoke=True)
+        else:
+            fn()
 
 
 if __name__ == "__main__":

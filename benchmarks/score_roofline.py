@@ -1,0 +1,145 @@
+"""Roofline + TPU timing for the fused eq. 11 route-score kernel at
+panel sizes where (B, N) exceeds VMEM.
+
+``kernels/route_score.py`` computes the (B, N) scoring contraction in
+one VMEM pass, tiled (block_b, block_n). At B = 64k x N = 64 the f32
+output panel alone is 16 MB — the whole ~16 MB/core VMEM budget of a
+v5e — so the kernel's grid tiling is load-bearing, not a formality:
+neither the output nor the (B, Kp) one-hot residency operand can be
+resident at once. This benchmark records, per B >= 64k shape:
+
+* the analytic roofline terms (same ``PEAK_FLOPS``/``HBM_BW`` device
+  model as ``benchmarks/roofline.py``): HBM bytes and FLOPs for the
+  FUSED single pass vs the per-term XLA contraction that materialises
+  each (B, N) intermediate (trans / switch-gate / compute / cell mask),
+  arithmetic intensity, and the memory-bound time floor each implies;
+* on a real TPU (``jax.default_backend() == "tpu"``), wall-clock
+  timings of ``score_matrix(backend="pallas")`` against the XLA
+  contraction — the measured counterpart of those two floors. On CPU
+  the kernel only runs in interpret mode (an emulation, not a timing
+  target — see ``score_kernel.py``), so timing columns record null and
+  the analytic table is the deliverable.
+
+    PYTHONPATH=src python -m benchmarks.score_roofline
+
+prints the CSV (``name,us_per_call,derived``) and rewrites
+``benchmarks/BENCH_score_roofline.json`` next to the other BENCH files.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.roofline import HBM_BW, PEAK_FLOPS
+from benchmarks.score_kernel import make_case
+from repro.core import batch_router as br
+
+JSON_PATH = pathlib.Path(__file__).parent / "BENCH_score_roofline.json"
+
+SHAPES = ((65536, 64), (131072, 64))  # (B, N): panels past the VMEM line
+VMEM_BYTES = 16 * 2**20               # ~16 MB/core (v5e)
+BLOCK_B = BLOCK_N = 128               # kernel tile (route_score defaults)
+KP = 128                              # catalogue axis, padded to one lane
+
+
+def analytic_terms(b: int, n: int) -> dict:
+    """HBM-traffic and FLOP model of the (B, N) scoring pass, f32."""
+    out_panel = b * n * 4
+    # fused kernel: two thin feature strips + the residency gemm
+    # operands + ONE output write; no (B, N) intermediate ever leaves
+    # VMEM (the gate, mask and adds happen in-register per tile)
+    fused_bytes = (8 * b * 4 + 8 * n * 4      # request/server strips
+                   + b * KP * 4 + KP * n * 4  # one-hot @ resident.T
+                   + 4 * (b + n)              # cell columns (int32)
+                   + out_panel)
+    # per-term XLA contraction: each eq. 5/7/9 term plus the residency
+    # gate and the cell mask materialises a (B, N) panel (write + read
+    # back for the next elementwise op) before the final sum
+    n_panels = 5
+    xla_bytes = fused_bytes + 2 * n_panels * out_panel
+    flops = 2.0 * b * n * KP + 8.0 * b * n    # gemm + elementwise terms
+    return {
+        "b": b, "n": n,
+        "out_panel_mib": round(out_panel / 2**20, 1),
+        "vmem_panels": round(out_panel / VMEM_BYTES, 2),
+        "grid": [-(-b // BLOCK_B), -(-n // BLOCK_N)],
+        "flops": flops,
+        "fused_hbm_bytes": fused_bytes,
+        "xla_hbm_bytes": xla_bytes,
+        "intensity_fused": round(flops / fused_bytes, 2),
+        "intensity_xla": round(flops / xla_bytes, 2),
+        # memory floor dominates on both paths: intensity ~ a few
+        # FLOP/byte vs the ~240 FLOP/byte v5e ridge point
+        "t_fused_us": round(max(fused_bytes / HBM_BW,
+                                flops / PEAK_FLOPS) * 1e6, 1),
+        "t_xla_us": round(max(xla_bytes / HBM_BW,
+                              flops / PEAK_FLOPS) * 1e6, 1),
+    }
+
+
+def time_backend(params, state, reqs, backend, repeats=5):
+    fn = jax.jit(lambda p, s, r: br.score_matrix(p, s, r, backend=backend))
+    jax.block_until_ready(fn(params, state, reqs))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(params, state, reqs))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(shapes=SHAPES, header=True, emit_json=True):
+    if header:
+        print("name,us_per_call,derived")
+    on_tpu = jax.default_backend() == "tpu"
+    rng = np.random.default_rng(1)
+    records = []
+    for b, n_total in shapes:
+        terms = analytic_terms(b, n_total)
+        print(
+            f"score_roofline_b{b}_n{n_total},{terms['t_fused_us']:.1f},"
+            f"panel_mib={terms['out_panel_mib']}"
+            f";vmem_panels={terms['vmem_panels']}"
+            f";t_xla_floor_us={terms['t_xla_us']}"
+            f";intensity={terms['intensity_fused']}"
+        )
+        if on_tpu:
+            params, state, reqs = make_case(
+                rng, b, max(1, n_total // 16), 16
+            )
+            t_pal = time_backend(params, state, reqs, "pallas")
+            t_xla = time_backend(params, state, reqs, "xla")
+            terms["measured_pallas_us"] = round(t_pal * 1e6, 1)
+            terms["measured_xla_us"] = round(t_xla * 1e6, 1)
+            terms["pallas_speedup"] = round(t_xla / t_pal, 2)
+            print(
+                f"score_tpu_pallas_b{b}_n{n_total},{t_pal * 1e6:.1f},"
+                f"xla_us={t_xla * 1e6:.1f}"
+                f";speedup={terms['pallas_speedup']}"
+            )
+        else:
+            terms["measured_pallas_us"] = None
+            terms["measured_xla_us"] = None
+        records.append(terms)
+
+    if emit_json:
+        payload = {
+            "device": jax.default_backend(),
+            "model": {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                      "vmem_bytes": VMEM_BYTES,
+                      "block": [BLOCK_B, BLOCK_N]},
+            "shapes": records,
+        }
+        JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {JSON_PATH.name} ({jax.default_backend()} "
+              f"{'measured' if on_tpu else 'analytic-only'})")
+    return records
+
+
+if __name__ == "__main__":
+    main()

@@ -47,6 +47,25 @@ Design
   association of eq. 9 — ``q*ftok/f + w/f`` vs ``(q*ftok + w)/f`` —
   rounds differently). ``chunk=None`` (default) keeps the single-scan
   path whose latencies are bit-exact against the oracle.
+* **Speculative parallel commit** (``route_batch(..., chunk=c)``, the
+  default ``speculative=True``, greedy policy): phase 1 prices the whole
+  chunk against the CHUNK-ENTRY residency (the fused kernel call gains
+  the residency gate), so each request's provisional argmin depends on
+  the fleet state only through the queue vector. A commit can invalidate
+  a later provisional decision only by CHANGING a score it read —
+  queue growth is carried exactly by a slimmed scan whose whole body is
+  ``argmin(base + queue*qcoef)`` plus one masked add, and the only
+  residency-mutating commits are misses (installs/evictions). Every
+  decision up to the first committed miss is therefore the oracle
+  decision; their LRU bookkeeping (hits only touch last-use clocks,
+  which no score reads) is applied in ONE vectorised scatter, and the
+  conflicting suffix from the first miss onward is replayed serially
+  with the full correction body. Steady-state serving (hit rate near 1)
+  commits whole chunks speculatively; cold caches degrade gracefully to
+  the serial correction scan. Decisions and fleet state remain
+  bit-identical to the scalar oracle; ``speculative=False`` forces the
+  plain correction scan (the A/B baseline ``benchmarks/
+  router_throughput.py`` records).
 * **Pluggable policies**: ``greedy`` (argmin of the eq. 11 latency),
   ``drain`` (drain-aware greedy: the queue backlog is discounted by the
   server's ``drain_rate`` before eq. 9 pricing), ``actor`` (a trained
@@ -75,10 +94,34 @@ Two opt-in attributes refine the contract:
   model's residency row and the request cell). ``core.policies`` builds
   the trained-actor policy on exactly this hook.
 
+Chunk-level hook (the batched-actor fast path): a ``needs_ctx`` policy
+may additionally define the attribute pair
+
+* ``chunk_precompute(cctx: ChunkPolicyCtx) -> aux`` — called once per
+  chunk (chunked path only) with the whole chunk's request columns and
+  the CHUNK-ENTRY residency; returns any pytree of ``(c, ...)`` arrays
+  (e.g. MLP decisions batched over the chunk on the MXU);
+* ``chunk_apply(aux_b, ctx) -> (server index, exact)`` — called per
+  step instead of ``policy_fn`` with that request's ``aux`` slice and
+  the live ``PolicyCtx``; it resolves the precomputed table against the
+  live state and FLAGS (rather than repairs) drift: ``exact=False``
+  on any step makes the router rerun the whole chunk through the plain
+  per-request path (one ``lax.cond`` per chunk — a per-step cond would
+  tax every iteration of the compiled scan with the expensive branch's
+  captured operands, even when never taken).
+
+``core.policies.make_actor_policy`` uses exactly this pair: the MLP is
+priced per chunk over the entry compat row plus every single-bit flip
+(a radius-1 Hamming-ball table), ``chunk_apply`` is a branch-free table
+lookup, and multi-bit residency drift — unobserved in steady serving —
+falls back to the exact whole-chunk replay.
+
 Whatever the policy returns is clamped to the request's cell (an
 out-of-cell choice falls back to the masked greedy argmin) and committed
-with full LRU/queue semantics; a policy can therefore never corrupt the
-fleet state, only pick worse servers.
+with full LRU/queue semantics; out-of-range indices — which a JAX gather
+would silently clamp to server N-1 — fall back the same way even on
+untopologied fleets, so a policy can never corrupt the fleet state, only
+pick worse servers.
 
 Multi-cell fleets
 -----------------
@@ -332,6 +375,22 @@ class PolicyCtx(NamedTuple):
     cell: Optional[jnp.ndarray] = None  # () int32, None when untopologied
 
 
+class ChunkPolicyCtx(NamedTuple):
+    """Chunk-level context for policies with a ``chunk_precompute`` hook.
+
+    The request columns cover one whole chunk; ``resident`` is the fleet
+    residency AT CHUNK ENTRY — decisions precomputed against it are
+    provisional, and ``chunk_apply`` must detect drift per request."""
+
+    params: FleetParams
+    model: jnp.ndarray        # (c,) int32 tagged catalogue indices
+    prompt_bits: jnp.ndarray  # (c,)
+    gen_tokens: jnp.ndarray   # (c,)
+    flops_tok: jnp.ndarray    # (c,)
+    resident: jnp.ndarray     # (N, K) bool chunk-entry residency
+    cell: Optional[jnp.ndarray] = None  # (c,) int32, None when untopologied
+
+
 def _greedy_policy(lats, obs, queue):
     return jnp.argmin(lats)
 
@@ -447,6 +506,7 @@ def route_batch(
     chunk: Optional[int] = None,
     unroll: int = 8,
     backend: Optional[str] = None,
+    speculative: bool = True,
 ):
     """Route a whole request batch in one jitted call; returns
     ``(state, outcome)``.
@@ -477,18 +537,24 @@ def route_batch(
       * ``backend`` — scoring backend for the chunked phase-1 / the
         fused kernel (``"xla"`` | ``"pallas"`` | ``"pallas-interpret"``;
         ``None`` reads ``$REPRO_ROUTER_BACKEND``).
+      * ``speculative`` — on the chunked greedy path, commit each
+        chunk's provisional decisions speculatively and replay only the
+        suffix after the first residency-mutating commit (see module
+        docstring). Decisions and fleet state are identical either way;
+        ``False`` forces the plain correction scan (the A/B baseline).
     """
     backend = resolve_backend(backend)  # env read stays outside the jit cache
     return _route_batch(params, state, reqs, drain_tokens, policy=policy,
                         actor=actor, chunk=chunk, unroll=unroll,
-                        backend=backend)
+                        backend=backend, speculative=speculative)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("policy", "actor", "chunk", "unroll", "backend")
+    jax.jit, static_argnames=("policy", "actor", "chunk", "unroll", "backend",
+                              "speculative")
 )
 def _route_batch(params, state, reqs, drain_tokens, *, policy, actor, chunk,
-                 unroll, backend):
+                 unroll, backend, speculative=True):
     policy_fn = _resolve_policy(policy, actor)
     dtype = jnp.result_type(reqs.prompt_bits, params.uplink_bps)
 
@@ -516,7 +582,7 @@ def _route_batch(params, state, reqs, drain_tokens, *, policy, actor, chunk,
         carry, outs = _scan_chunked(params, reqs, carry, policy_fn, dtype,
                                     gen_tokens, drain, drain_rate, arrivals,
                                     has_cells, has_time, chunk, unroll,
-                                    backend)
+                                    backend, speculative)
     resident, last_use, queue, clock, time_s = carry
     choice, latency, hit = outs
     new_state = FleetState(
@@ -534,6 +600,10 @@ def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     work = gen_tokens * flops_tok                               # (B,)
     needs_ctx = getattr(policy_fn, "needs_ctx", False)
     prompt = reqs.prompt_bits if needs_ctx else None
+    # the builtin argmins return indices in [0, N) by construction and
+    # can only land out of cell when the whole row is +inf (-> rejected
+    # either way): skip the fallback clamp for them
+    needs_clamp = policy_fn not in _ARGMIN_POLICIES
 
     def step(carry, xs):
         resident, last_use, queue, clock, time_s = carry
@@ -574,10 +644,16 @@ def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
                                  jnp.int32)
         else:
             choice = jnp.asarray(policy_fn(lats, obs, queue_vis), jnp.int32)
-        if has_cells:
-            # an actor may ignore the inf-masked inputs; never commit an
-            # out-of-cell choice — fall back to the masked greedy argmin
-            choice = jnp.where(visible[choice], choice,
+        if needs_clamp:
+            # an actor may ignore the inf-masked inputs or return an
+            # index outside [0, N) — which a JAX gather would silently
+            # clamp to server N-1. Never commit an out-of-cell or
+            # out-of-range choice: fall back to the masked greedy argmin.
+            safe = jnp.clip(choice, 0, lats.shape[0] - 1)
+            choice_ok = choice == safe
+            if has_cells:
+                choice_ok &= visible[safe]
+            choice = jnp.where(choice_ok, safe,
                                jnp.argmin(lats).astype(jnp.int32))
 
         # a cell with no members and no cloud column leaves every
@@ -622,8 +698,10 @@ def _static_argmin(col, k):
 
 def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
                   drain_rate, arrivals, has_cells, has_time, chunk, unroll,
-                  backend):
-    """Two-phase commit: fused chunk scoring + slimmed correction scan.
+                  backend, speculative=True):
+    """Two-phase commit: fused chunk scoring + slimmed correction scan,
+    with the speculative parallel commit on top for the greedy policy
+    (``speculative=True``; see the module docstring for the argument).
 
     The serial region also runs on a denser state encoding than the
     public ``FleetState`` (converted at entry/exit):
@@ -675,6 +753,11 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     # clamp is skipped for them; every other policy gets clamped,
     # matching the single-scan path decision for decision
     needs_clamp = policy_fn not in _ARGMIN_POLICIES
+    has_hook = needs_ctx and hasattr(policy_fn, "chunk_precompute")
+    # speculative parallel commit: greedy only — its provisional argmin
+    # depends on state only through (queue, residency), which the cheap
+    # scan + drift replay reproduce exactly; other policies read obs/ctx
+    use_spec = speculative and policy_fn is _greedy_policy
     iota_n = jnp.arange(n, dtype=jnp.int32)
     num_k = params.size_bits.shape[0]
     iota_k = jnp.arange(num_k + 1, dtype=jnp.int32)  # +1: free-slot row
@@ -692,10 +775,40 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             None if x is None else x.reshape((n_chunks, c) + x.shape[1:])
         )
 
+    def dense_commit(lru, queue, clock, model_b, gen_b, choice, ok):
+        """Dense one-hot LRU/queue commit at ``choice``, shared between
+        the correction scan and the speculative replay body: ONE column
+        slice yields hit bit, eviction candidates and capacity check."""
+        lru_col = jax.lax.dynamic_slice(
+            lru, (jnp.int32(0), choice), (num_k + 1, 1)
+        )[:, 0]
+        was_resident = lru_col[model_b] < _LRU_FREE
+        evict_idx = _static_argmin(lru_col, num_k)
+        full = lru_col[num_k] <= 0                              # free slots
+        evict = ~was_resident & full
+        touch_n = iota_n == choice                              # (N,)
+        if ok is None:
+            out_choice, hit = choice, was_resident
+        else:
+            evict &= ok
+            touch_n &= ok
+            out_choice, hit = jnp.where(ok, choice, -1), was_resident & ok
+        taken = (~was_resident).astype(jnp.int32) - evict.astype(jnp.int32)
+        pair_set = (iota_k == model_b)[:, None] & touch_n[None, :]
+        pair_evict = ((iota_k == evict_idx) & evict)[:, None] & touch_n[None, :]
+        pair_free = (iota_k == num_k)[:, None] & touch_n[None, :]
+        lru = jnp.where(
+            pair_set, clock,
+            jnp.where(pair_evict, _LRU_FREE,
+                      lru - jnp.where(pair_free, taken, 0)),
+        )
+        queue = queue + jnp.where(touch_n, gen_b, 0.0)
+        return lru, queue, out_choice, hit
+
     def step(carry, xs):
         lru, queue, clock, time_s = carry
         model_b, scal_b, drain_b, arrival_b, valid_b, base_b, prompt_b, \
-            cell_b = xs
+            cell_b, aux_b = xs
         gen_b, size_b, ftok_b = scal_b[0], scal_b[1], scal_b[2]
 
         if has_time:  # wall-clock residue: queue decay since last arrival
@@ -741,14 +854,32 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
                 gen_tokens=gen_b, flops_tok=ftok_b, resident=resident_m,
                 queue=queue, cell=cell_b,
             )
-            choice = jnp.asarray(policy_fn(lats, obs, queue_vis, ctx),
-                                 jnp.int32)
+            if aux_b is not None:
+                # chunk-level hook: the per-chunk precompute already did
+                # the batched work; the per-step call only resolves the
+                # precomputed decision against the live state. `exact`
+                # flags whether that resolution matches what the policy
+                # would decide per request — chunk_step replays the
+                # whole chunk through the per-request path otherwise.
+                choice, exact_b = policy_fn.chunk_apply(aux_b, ctx)
+                choice = jnp.asarray(choice, jnp.int32)
+                if valid_b is not None:  # inert pad rows never replay
+                    exact_b |= ~valid_b
+            else:
+                choice = jnp.asarray(policy_fn(lats, obs, queue_vis, ctx),
+                                     jnp.int32)
         else:
             choice = jnp.asarray(policy_fn(lats, obs, queue_vis), jnp.int32)
-        if has_cells and needs_clamp:
-            # an actor may ignore the inf-masked inputs; never commit an
-            # out-of-cell choice — fall back to the masked greedy argmin
-            choice = jnp.where(jnp.isfinite(base_b[choice]), choice,
+        if needs_clamp:
+            # an actor may ignore the inf-masked inputs or return an
+            # index outside [0, N) — which a JAX gather would silently
+            # clamp to server N-1. Never commit an out-of-cell or
+            # out-of-range choice: fall back to the masked greedy argmin.
+            safe = jnp.clip(choice, 0, n - 1)
+            choice_ok = choice == safe
+            if has_cells:
+                choice_ok &= jnp.isfinite(base_b[safe])
+            choice = jnp.where(choice_ok, safe,
                                jnp.argmin(lats).astype(jnp.int32))
 
         lat_b = lats[choice]
@@ -756,35 +887,15 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
         if valid_b is not None:
             ok = valid_b if ok is None else ok & valid_b
 
-        # dense one-hot commit on the (K+1, N) lru encoding: ONE column
-        # slice yields hit bit, eviction candidates and capacity check
-        lru_col = jax.lax.dynamic_slice(
-            lru, (jnp.int32(0), choice), (num_k + 1, 1)
-        )[:, 0]
-        was_resident = lru_col[model_b] < _LRU_FREE
-        evict_idx = _static_argmin(lru_col, num_k)
-        full = lru_col[num_k] <= 0                              # free slots
-        evict = ~was_resident & full
-        touch_n = iota_n == choice                              # (N,)
-        if ok is None:
-            out_choice, hit = choice, was_resident
-        else:
-            evict &= ok
-            touch_n &= ok
-            out_choice, hit = jnp.where(ok, choice, -1), was_resident & ok
-        # one stacked output vector -> one scan write per request
-        out = jnp.stack([out_choice.astype(dtype), lat_b,
-                         hit.astype(dtype)])
-        taken = (~was_resident).astype(jnp.int32) - evict.astype(jnp.int32)
-        pair_set = (iota_k == model_b)[:, None] & touch_n[None, :]
-        pair_evict = ((iota_k == evict_idx) & evict)[:, None] & touch_n[None, :]
-        pair_free = (iota_k == num_k)[:, None] & touch_n[None, :]
-        lru = jnp.where(
-            pair_set, clock,
-            jnp.where(pair_evict, _LRU_FREE,
-                      lru - jnp.where(pair_free, taken, 0)),
+        # dense one-hot commit on the (K+1, N) lru encoding
+        lru, queue, out_choice, hit = dense_commit(
+            lru, queue, clock, model_b, gen_b, choice, ok
         )
-        queue = queue + jnp.where(touch_n, gen_b, 0.0)
+        # one stacked output vector -> one scan write per request
+        cols = [out_choice.astype(dtype), lat_b, hit.astype(dtype)]
+        if needs_ctx and aux_b is not None:
+            cols.append(exact_b.astype(dtype))
+        out = jnp.stack(cols)
         if drain_b is not None:
             d = drain_b if valid_b is None else jnp.where(valid_b, drain_b,
                                                           0.0)
@@ -807,16 +918,207 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             srv_cell=params.cell if has_cells else None,
             cloud_cell=CLOUD_CELL, backend=backend,
         )                                                       # (c, N)
-        inner = (model_c, scal_c, drain_c, arr_c, valid_c, base,
-                 prompt_c if needs_ctx else None,
-                 cell_c if needs_ctx and has_cells else None)
-        return jax.lax.scan(step, carry, inner, unroll=min(unroll, c))
+        def inner_xs(aux):
+            return (model_c, scal_c, drain_c, arr_c, valid_c, base,
+                    prompt_c if needs_ctx else None,
+                    cell_c if needs_ctx and has_cells else None, aux)
+
+        if not has_hook:
+            return jax.lax.scan(step, carry, inner_xs(None),
+                                unroll=min(unroll, c))
+        # chunk-level policy hook: batch the expensive per-request work
+        # (e.g. the actor MLP) over the whole chunk against the
+        # CHUNK-ENTRY residency; the scan resolves each step against
+        # the live state and flags any it could not resolve exactly.
+        # The replay for those lives HERE, per chunk, not per step: an
+        # expensive per-step cond branch taxes every iteration just by
+        # existing (its captured operands defeat the scan-body fusion),
+        # while a chunk that never drifts past the precomputed variants
+        # pays only one predicate for the whole chunk.
+        cctx = ChunkPolicyCtx(
+            params=params, model=model_c, prompt_bits=prompt_c,
+            gen_tokens=scal_c[:, 0], flops_tok=scal_c[:, 2],
+            resident=(carry[0][:num_k] < _LRU_FREE).T,
+            cell=cell_c if has_cells else None,
+        )
+        aux = policy_fn.chunk_precompute(cctx)
+        fast_carry, fast_outs = jax.lax.scan(
+            step, carry, inner_xs(aux), unroll=min(unroll, c))
+
+        def keep(_):
+            return fast_carry, fast_outs[:, :3]
+
+        def replay(_):  # rerun the chunk through the per-request path
+            return jax.lax.scan(step, carry, inner_xs(None),
+                                unroll=min(unroll, c))
+
+        return jax.lax.cond(jnp.all(fast_outs[:, 3] != 0.0),
+                            keep, replay, None)
+
+    def spec_chunk_step(carry, xs):
+        lru, queue, clock, time_s = carry
+        model_c, scal_c, prompt_c, work_c, drain_c, cell_c, arr_c, \
+            valid_c = xs
+        gen_c, size_c, ftok_c = scal_c[:, 0], scal_c[:, 1], scal_c[:, 2]
+        idx_c = jnp.arange(c, dtype=jnp.int32)
+
+        # phase 1 — the same switch-free base the correction scan uses...
+        base = ops.route_score(
+            prompt_c, None, ftok_c, work_c,
+            params.uplink_bps, params.backhaul_bps, params.flops_per_s,
+            req_cell=cell_c,
+            srv_cell=params.cell if has_cells else None,
+            cloud_cell=CLOUD_CELL, backend=backend,
+        )                                                    # (c, N)
+        # ... plus the eq. 7 switch gate priced against the CHUNK-ENTRY
+        # residency, applied with the per-step expression verbatim: the
+        # speculative scores stay bitwise equal to the correction
+        # scan's on every step where residency has not yet drifted
+        hitrow = (lru[:num_k] < _LRU_FREE)[model_c]          # (c, N)
+        basez = base + jnp.where(
+            hitrow, 0.0, size_c[:, None] / params.backhaul_bps[None, :]
+        )
+
+        def spec_step(carry, xs_b):
+            queue, time_s = carry
+            basez_b, ftok_b, gen_b, drain_b, arrival_b, valid_b = xs_b
+            if has_time:
+                dt = jnp.maximum(arrival_b - time_s, 0.0)
+                if valid_b is not None:
+                    dt = jnp.where(valid_b, dt, 0.0)
+                    time_s = jnp.where(valid_b,
+                                       jnp.maximum(time_s, arrival_b), time_s)
+                else:
+                    time_s = jnp.maximum(time_s, arrival_b)
+                queue = jnp.maximum(queue - drain_rate * dt, 0.0)
+            # the whole speculative recurrence: residency (and with it
+            # the argmin's score ordering) is FROZEN at chunk entry, so
+            # only the queue backlog rides the carry — score, argmin,
+            # one masked add. The choice itself is NOT emitted: the
+            # queue trajectory alone reproduces it post-scan, bitwise
+            lats = basez_b + (queue * ftok_b) / params.flops_per_s
+            choice = jnp.argmin(lats).astype(jnp.int32)
+            touch_n = iota_n == choice
+            if has_cells:
+                touch_n &= jnp.isfinite(basez_b[choice])
+            if valid_b is not None:
+                touch_n &= valid_b
+            queue = queue + jnp.where(touch_n, gen_b, 0.0)
+            if drain_b is not None:
+                d = drain_b if valid_b is None else jnp.where(valid_b,
+                                                              drain_b, 0.0)
+                queue = jnp.maximum(queue - d, 0.0)
+            out = (choice, queue) + ((time_s,) if has_time else ())
+            return (queue, time_s), out
+
+        inner = (basez, ftok_c, gen_c, drain_c, arr_c, valid_c)
+        _, souts = jax.lax.scan(spec_step, (queue, time_s), inner,
+                                unroll=min(unroll, c))
+        choices = souts[0]
+        q_ext = jnp.concatenate([queue[None], souts[1]])     # (c+1, N)
+        # everything the cheap scan did NOT emit comes back exactly,
+        # vectorised, from the stored queue trajectory: re-running the
+        # body's own expressions on its own carried values is bitwise
+        q_pre = q_ext[:c]
+        if has_time:
+            t_ext = jnp.concatenate([time_s[None], souts[2]])
+            dt_v = jnp.maximum(arr_c - t_ext[:c], 0.0)
+            if valid_c is not None:
+                dt_v = jnp.where(valid_c, dt_v, 0.0)
+            q_pre = jnp.maximum(
+                q_pre - drain_rate[None, :] * dt_v[:, None], 0.0
+            )
+        lats_full = basez + (q_pre * ftok_c[:, None]) / \
+            params.flops_per_s[None, :]
+        col = choices[:, None]
+        lat = jnp.take_along_axis(lats_full, col, axis=1)[:, 0]
+        hits = jnp.take_along_axis(hitrow, col, axis=1)[:, 0]
+        ok = jnp.isfinite(lat) if has_cells else jnp.ones((c,), bool)
+        okv = ok if valid_c is None else ok & valid_c
+        # first conflicting commit: a committed MISS mutates residency
+        # (install + possible eviction), invalidating later frozen
+        # scores; committed HITS only touch LRU clocks, which no score
+        # reads — everything before the first miss is oracle-exact
+        miss = okv & ~hits
+        i0 = jnp.where(miss.any(), jnp.argmax(miss).astype(jnp.int32),
+                       jnp.int32(c))
+        # clock advances per VALID request, committed or not
+        cum = (idx_c + 1 if valid_c is None
+               else jnp.cumsum(valid_c.astype(jnp.int32)))
+        clocks = clock + cum                                 # (c,)
+        # parallel commit of the speculative prefix: ONE scatter-max
+        # applies every prefix hit's LRU clock (clocks grow with the
+        # stream index, so duplicate (model, server) slots resolve to
+        # the LATEST write — exactly the serial order); prefix queue
+        # adds already live in the trajectory
+        in_prefix = okv & hits & (idx_c < i0)
+        scat_col = jnp.where(in_prefix, choices, n)          # n: dump lane
+        lru = jnp.pad(lru, ((0, 0), (0, 1)))
+        lru = lru.at[model_c, scat_col].max(clocks)[:, :n]
+        # rewind carried state to the first conflicting commit ...
+        queue = jnp.take(q_ext, i0, axis=0)
+        clock = clock + jnp.where(i0 > 0, cum[jnp.maximum(i0 - 1, 0)], 0)
+        if has_time:
+            time_s = jnp.take(t_ext, i0, axis=0)
+        och = jnp.where(okv, choices, -1)
+        ohit = hits & okv
+
+        def replay_body(i, st):
+            # ... and replay the conflicting suffix serially with the
+            # full correction-scan body (live residency via the same
+            # expressions — bit-identical to the non-speculative path)
+            lru, queue, clk, ts, och, olat, ohit = st
+            model_b, gen_b = model_c[i], gen_c[i]
+            valid_b = None if valid_c is None else valid_c[i]
+            if has_time:
+                arrival_b = arr_c[i]
+                dt = jnp.maximum(arrival_b - ts, 0.0)
+                if valid_b is not None:
+                    dt = jnp.where(valid_b, dt, 0.0)
+                    ts = jnp.where(valid_b, jnp.maximum(ts, arrival_b), ts)
+                else:
+                    ts = jnp.maximum(ts, arrival_b)
+                queue = jnp.maximum(queue - drain_rate * dt, 0.0)
+            clk = clk + (1 if valid_b is None else valid_b.astype(clk.dtype))
+            rm_key = jax.lax.dynamic_slice(
+                lru, (model_b, jnp.int32(0)), (1, n)
+            )[0]
+            resident_m = rm_key < _LRU_FREE
+            lats = (
+                base[i]
+                + jnp.where(resident_m, 0.0,
+                            size_c[i] / params.backhaul_bps)
+            ) + (queue * ftok_c[i]) / params.flops_per_s
+            choice = jnp.argmin(lats).astype(jnp.int32)
+            lat_b = lats[choice]
+            ok_b = jnp.isfinite(lat_b) if has_cells else None
+            if valid_b is not None:
+                ok_b = valid_b if ok_b is None else ok_b & valid_b
+            lru, queue, out_choice, hit_b = dense_commit(
+                lru, queue, clk, model_b, gen_b, choice, ok_b
+            )
+            if drain_c is not None:
+                d = drain_c[i]
+                if valid_b is not None:
+                    d = jnp.where(valid_b, d, 0.0)
+                queue = jnp.maximum(queue - d, 0.0)
+            och = och.at[i].set(out_choice)
+            olat = olat.at[i].set(lat_b)
+            ohit = ohit.at[i].set(hit_b)
+            return (lru, queue, clk, ts, och, olat, ohit)
+
+        st = (lru, queue, clock, time_s, och, lat, ohit)
+        lru, queue, clock, time_s, och, olat, ohit = jax.lax.fori_loop(
+            i0, c, replay_body, st
+        )
+        return (lru, queue, clock, time_s), (och, olat, ohit)
 
     # (c, 3) strip of per-request scalars: one xs slice per step
     scalars = jnp.stack([gen, size_bits, flops_tok], axis=1)
     xs = tuple(map(chunks, (model, scalars, prompt, work,
                             drains, cells, arrs, valid)))
-    carry, outs = jax.lax.scan(chunk_step, carry, xs)
+    carry, outs = jax.lax.scan(spec_chunk_step if use_spec else chunk_step,
+                               carry, xs)
     lru, queue, clock, time_s = carry
     lru = lru[:num_k]                                        # drop free row
     resident = (lru < _LRU_FREE).T
@@ -824,10 +1126,15 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     # model that was evicted mid-batch doesn't surface a bogus clock
     last_use = jnp.where(resident, lru.T, last_use0)
     carry = (resident, last_use, queue, clock, time_s)
-    outs = outs.reshape(n_chunks * c, 3)[:b]                 # unpack
-    choice = outs[:, 0].astype(jnp.int32)
-    latency = outs[:, 1]
-    hit = outs[:, 2] != 0
+    if use_spec:                                             # unpack
+        choice = outs[0].reshape(n_chunks * c)[:b]
+        latency = outs[1].reshape(n_chunks * c)[:b]
+        hit = outs[2].reshape(n_chunks * c)[:b]
+    else:
+        outs = outs.reshape(n_chunks * c, 3)[:b]
+        choice = outs[:, 0].astype(jnp.int32)
+        latency = outs[:, 1]
+        hit = outs[:, 2] != 0
     return carry, (choice, latency, hit)
 
 
@@ -838,10 +1145,14 @@ def stats(outcome: RouteOutcome, *, cloud_index: Optional[int] = None) -> dict:
     the latency mean, so they are masked out of ``mean_latency`` and
     reported separately as ``completion_rate`` — the fraction of
     requests that found a feasible server (the paper's third headline
-    metric alongside latency and hit rate). ``cloud_index`` — the cloud
-    column's server index (conventionally the last) — adds the
-    ``cloud_fallback_rate``, so call sites stop re-deriving it from raw
-    choices.
+    metric alongside latency and hit rate). ``residency_hit_rate`` is
+    masked the same way: rejected requests are forced ``hit=False`` by
+    the router, so counting them in the mean would deflate the hit rate
+    exactly in the rejection-heavy scenarios where it matters — it is
+    the hit fraction OVER COMPLETED requests (``nan`` when none
+    complete). ``cloud_index`` — the cloud column's server index
+    (conventionally the last) — adds the ``cloud_fallback_rate``, so
+    call sites stop re-deriving it from raw choices.
     """
     ok = outcome.choice >= 0
     n_ok = jnp.maximum(ok.sum(), 1)
@@ -850,9 +1161,14 @@ def stats(outcome: RouteOutcome, *, cloud_index: Optional[int] = None) -> dict:
         jnp.where(ok, outcome.latency, 0.0).sum() / n_ok,
         jnp.inf,
     )
+    hit_rate = jnp.where(
+        ok.any(),
+        (outcome.hit & ok).sum() / n_ok,
+        jnp.nan,
+    )
     out = {
         "mean_latency": float(mean_lat),
-        "residency_hit_rate": float(outcome.hit.mean()),
+        "residency_hit_rate": float(hit_rate),
         "completion_rate": float(ok.mean()),
     }
     if cloud_index is not None:
@@ -872,11 +1188,15 @@ def window_stats(outcome: RouteOutcome, window_id, num_windows: int, *,
     ``window_id`` assigns each request to a window in ``[0,
     num_windows)`` — any segmentation works (request-count chunks, wall-
     clock buckets). Returns ``(num_windows,)`` numpy arrays; a window
-    with no completed requests reports ``inf`` mean latency, an empty
-    window zero rates. ``completed_means`` adds extra columns: each
-    ``name -> (B,)`` per-request value is averaged over the window's
-    COMPLETED requests (values at rejected requests must already be
-    zero — e.g. ``workloads.simulate.request_energy_j``)."""
+    with no completed requests reports ``inf`` mean latency and ``nan``
+    hit rate / completed means (there is nothing to average — ``0.0``
+    would read as an impossibly perfect measurement), an empty window
+    zero rates. ``residency_hit_rate`` is the hit fraction over the
+    window's COMPLETED requests, matching :func:`stats`.
+    ``completed_means`` adds extra columns: each ``name -> (B,)``
+    per-request value is averaged over the window's COMPLETED requests
+    (values at rejected requests must already be zero — e.g.
+    ``workloads.simulate.request_energy_j``)."""
     wid = np.asarray(window_id)
     choice = np.asarray(outcome.choice)
     ok = choice >= 0
@@ -886,7 +1206,7 @@ def window_stats(outcome: RouteOutcome, window_id, num_windows: int, *,
         wid, weights=np.where(ok, np.asarray(outcome.latency), 0.0),
         minlength=num_windows,
     )
-    hits = np.bincount(wid, weights=np.asarray(outcome.hit),
+    hits = np.bincount(wid, weights=np.asarray(outcome.hit) & ok,
                        minlength=num_windows)
     denom = np.maximum(count, 1.0)
     denom_ok = np.maximum(n_ok, 1.0)
@@ -894,14 +1214,17 @@ def window_stats(outcome: RouteOutcome, window_id, num_windows: int, *,
         "requests": count.astype(np.int64),
         "mean_latency": np.where(n_ok > 0, lat_sum / denom_ok, np.inf),
         "completion_rate": n_ok / denom,
-        "residency_hit_rate": hits / denom,
+        "residency_hit_rate": np.where(n_ok > 0, hits / denom_ok, np.nan),
     }
     if cloud_index is not None:
         out["cloud_fallback_rate"] = np.bincount(
             wid, weights=(choice == cloud_index), minlength=num_windows
         ) / denom
     for name, vals in (completed_means or {}).items():
-        out[name] = np.bincount(
-            wid, weights=np.asarray(vals), minlength=num_windows
-        ) / denom_ok
+        out[name] = np.where(
+            n_ok > 0,
+            np.bincount(wid, weights=np.asarray(vals),
+                        minlength=num_windows) / denom_ok,
+            np.nan,
+        )
     return out

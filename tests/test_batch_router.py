@@ -316,8 +316,10 @@ def test_chunked_matches_legacy_scan_all_policies():
 
 
 def test_stats_masks_rejected_requests():
-    """Rejected requests must not poison mean_latency; completion_rate
-    reports them (the paper's third headline metric)."""
+    """Rejected requests must not poison mean_latency OR deflate the
+    hit rate; completion_rate reports them (the paper's third headline
+    metric). Rejected requests are forced hit=False by the router, so
+    residency_hit_rate averages over COMPLETED requests only."""
     out = br.RouteOutcome(
         choice=jnp.asarray([0, -1, 2, -1], jnp.int32),
         latency=jnp.asarray([1.0, jnp.inf, 3.0, jnp.inf], jnp.float32),
@@ -326,7 +328,7 @@ def test_stats_masks_rejected_requests():
     got = br.stats(out)
     assert got["mean_latency"] == pytest.approx(2.0)
     assert got["completion_rate"] == pytest.approx(0.5)
-    assert got["residency_hit_rate"] == pytest.approx(0.25)
+    assert got["residency_hit_rate"] == pytest.approx(0.5)  # 1 of 2 done
 
     none = br.stats(out._replace(
         choice=jnp.full((4,), -1, jnp.int32),
@@ -334,6 +336,7 @@ def test_stats_masks_rejected_requests():
     ))
     assert none["completion_rate"] == 0.0
     assert np.isinf(none["mean_latency"])  # no finite sample to average
+    assert np.isnan(none["residency_hit_rate"])  # nothing completed
 
 
 def test_route_batch_unroll_is_a_knob():
@@ -382,3 +385,48 @@ def test_fleet_scale_single_call():
     st_c, out_c = br.route_batch(params, st0, reqs, 0.0, chunk=256)
     np.testing.assert_array_equal(np.asarray(out_c.choice), sc_choice)
     np.testing.assert_array_equal(np.asarray(st_c.resident), resident)
+
+
+@pytest.mark.parametrize("chunk", [None, 64])
+def test_out_of_range_policy_falls_back_to_argmin(chunk):
+    """Untopologied (has_cells=False) fleets: a policy emitting an index
+    >= N (or negative) used to be silently clamped to server N-1 by XLA
+    gather semantics and committed with no signal. It now falls back to
+    the masked greedy argmin — the same fallback the out-of-cell clamp
+    applies — on both the single-scan and chunked paths."""
+
+    def rogue(lats, obs, queue):
+        return jnp.int32(99)  # far out of range, every request
+
+    rng = np.random.default_rng(57)
+    servers = _random_fleet(rng, 4, 2)
+    models, bits, toks = _random_stream(rng, 150)
+    params, state = br.fleet_from_servers(servers, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+    )
+    s_rogue, o_rogue = br.route_batch(params, state, reqs, policy=rogue,
+                                      chunk=chunk)
+    s_greedy, o_greedy = br.route_batch(params, state, reqs,
+                                        policy="greedy", chunk=chunk)
+    # the fallback IS the greedy argmin: identical stream and state
+    np.testing.assert_array_equal(np.asarray(o_rogue.choice),
+                                  np.asarray(o_greedy.choice))
+    np.testing.assert_array_equal(np.asarray(o_rogue.hit),
+                                  np.asarray(o_greedy.hit))
+    np.testing.assert_array_equal(np.asarray(s_rogue.resident),
+                                  np.asarray(s_greedy.resident))
+    np.testing.assert_array_equal(np.asarray(s_rogue.queue_tokens),
+                                  np.asarray(s_greedy.queue_tokens))
+    assert (np.asarray(o_rogue.choice) < 4).all()
+    assert (np.asarray(o_rogue.choice) >= 0).all()
+
+    def negative(lats, obs, queue):
+        return jnp.int32(-3)
+
+    _, o_neg = br.route_batch(params, state, reqs, policy=negative,
+                              chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(o_neg.choice),
+                                  np.asarray(o_greedy.choice))

@@ -441,3 +441,124 @@ def test_orphan_cell_requests_are_rejected_uncommitted():
     # the orphan's model must not have been cached anywhere new
     initially = np.array([1 in s.resident for s in fleet])
     np.testing.assert_array_equal(np.asarray(state.resident)[:, 1], initially)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas-interpret"])
+@pytest.mark.parametrize("seed,n_cells,chunk,cache_slots,cloud", [
+    (50, 1, 64, 2, True),    # hit-heavy: whole chunks commit speculatively
+    (51, 2, 100, 1, False),  # slots=1 + orphan cells: constant conflicts
+    (52, 4, 64, 1, True),    # miss-heavy with cloud + drain
+])
+def test_speculative_commit_matches_scalar_oracle(seed, n_cells, chunk,
+                                                  cache_slots, cloud,
+                                                  backend):
+    """The speculative parallel commit reproduces the scalar oracle —
+    choices, LRU clocks, residency, queues and fleet clock — for C in
+    {1, 2, 4} cells with cloud fallback, time drain and rejections, on
+    both scoring backends. The slots=1 configs force a residency-
+    mutating commit (a conflict) in essentially every chunk, so the
+    serial suffix replay is exercised, not just the all-hit fast path;
+    the no-cloud config streams orphan cells so rejected requests flow
+    through the speculative recurrence too. The speculative path must
+    also equal the plain correction scan bit for bit (latencies
+    included), not merely to ulps."""
+    with enable_x64():
+        rng = np.random.default_rng(seed)
+        fleet = _random_multicell_fleet(rng, n_cells, 3,
+                                        cache_slots=cache_slots, cloud=cloud)
+        # without the cloud column, draw some unroutable cells too
+        models, bits, toks, cells, arrivals = _random_stream(
+            rng, 250, n_cells if cloud else n_cells + 1
+        )
+        router, sc_choice, sc_lat = _run_scalar(
+            fleet, models, bits, toks, cells, arrivals
+        )
+        params, state0 = br.fleet_from_servers(fleet, CATALOG)
+        reqs = br.RequestBatch(
+            model=jnp.asarray(models, jnp.int32),
+            prompt_bits=jnp.asarray(bits, jnp.float64),
+            gen_tokens=jnp.asarray(toks, jnp.float64),
+            cell=jnp.asarray(cells, jnp.int32),
+            arrival_s=jnp.asarray(arrivals, jnp.float64),
+        )
+        st_spec, out_spec = br.route_batch(params, state0, reqs, chunk=chunk,
+                                           backend=backend, speculative=True)
+        st_ser, out_ser = br.route_batch(params, state0, reqs, chunk=chunk,
+                                         backend=backend, speculative=False)
+        if not cloud:  # the orphan cells actually exercised rejection
+            assert (sc_choice == -1).any()
+        np.testing.assert_array_equal(np.asarray(out_spec.choice), sc_choice)
+        np.testing.assert_allclose(np.asarray(out_spec.latency), sc_lat,
+                                   rtol=1e-12, atol=0.0)
+        _assert_fleet_state_matches(router, st_spec)
+        # speculative vs serial correction scan: bit-identical
+        np.testing.assert_array_equal(np.asarray(out_spec.choice),
+                                      np.asarray(out_ser.choice))
+        np.testing.assert_array_equal(np.asarray(out_spec.latency),
+                                      np.asarray(out_ser.latency))
+        np.testing.assert_array_equal(np.asarray(out_spec.hit),
+                                      np.asarray(out_ser.hit))
+        for a, b in zip(st_spec, st_ser):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_empty_cell_rejection_heavy_chunked_matches_scan():
+    """An EMPTY cell (no servers, no cloud column): every request tagged
+    to it is rejected, and the scan, chunked and speculative paths all
+    agree with the scalar oracle decision for decision — the inert
+    rejected steps must not desynchronise the chunk bookkeeping."""
+    mk = lambda c, i, res: EdgeServer(
+        name=f"c{c}-es{i}", flops_per_s=1e14, cache_slots=2,
+        uplink_bps=1e8, backhaul_bps=1e9, resident=res, cell=c,
+        drain_rate=2e4,
+    )
+    fleet = [mk(0, 0, [0, 1]), mk(0, 1, [2, 3]),
+             mk(2, 0, [1, 2]), mk(2, 1, [0, 3])]  # cell 1 has no servers
+    rng = np.random.default_rng(53)
+    models, bits, toks, cells, arrivals = _random_stream(rng, 200, 3)
+    assert (cells == 1).any()
+
+    router, sc_choice, _ = _run_scalar(
+        fleet, models, bits, toks, cells, arrivals
+    )
+    assert (sc_choice == -1).sum() >= 50  # genuinely rejection-heavy
+    params, state0 = br.fleet_from_servers(fleet, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+        cell=jnp.asarray(cells, jnp.int32),
+        arrival_s=jnp.asarray(arrivals, jnp.float32),
+    )
+    st_scan, out_scan = br.route_batch(params, state0, reqs)
+    runs = {
+        "chunked": br.route_batch(params, state0, reqs, chunk=64,
+                                  speculative=False),
+        "spec": br.route_batch(params, state0, reqs, chunk=64,
+                               speculative=True),
+    }
+    np.testing.assert_array_equal(np.asarray(out_scan.choice), sc_choice)
+    # f32 stream: decisions/residency vs the oracle exactly, queues to f32
+    resident = np.asarray(st_scan.resident)
+    for i, srv in enumerate(router.servers):
+        assert set(np.nonzero(resident[i])[0]) == set(srv.resident), i
+    np.testing.assert_allclose(
+        np.asarray(st_scan.queue_tokens),
+        [s.queue_tokens for s in router.servers], rtol=1e-4,
+    )
+    for name, (st, out) in runs.items():
+        np.testing.assert_array_equal(np.asarray(out.choice), sc_choice,
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(out.hit),
+                                      np.asarray(out_scan.hit), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(st.resident), resident,
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(st.last_use),
+                                      np.asarray(st_scan.last_use),
+                                      err_msg=name)
+    # the hit-rate fix: rejected requests don't deflate the metric
+    s = br.stats(out_scan)
+    ok = sc_choice >= 0
+    assert s["completion_rate"] == pytest.approx(ok.mean())
+    assert s["residency_hit_rate"] == pytest.approx(
+        np.asarray(out_scan.hit)[ok].mean())

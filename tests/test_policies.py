@@ -361,3 +361,106 @@ def test_drain_beats_greedy_on_bursty_fixture():
     # structural margin (greedy keeps paying B's slow undrained service),
     # not a tie-break accident
     assert lat_drain < 0.9 * lat_greedy, (lat_drain, lat_greedy)
+
+
+# ---------------------------------------------------------------------------
+# chunk-level actor hook: batched table scoring + drift replay
+# ---------------------------------------------------------------------------
+def _hooked_actor(tmp_path, seed=2):
+    p = env_params_from_catalog(CATALOG, num_eds=4, num_ess=3)
+    cfg = maddpg.AlgoConfig(hidden=32)
+    ts = maddpg.init_state(jax.random.key(seed), p, cfg)
+    policies.save_actor_checkpoint(tmp_path, ts.actor, p, cfg)
+    fleet = _multicell_fleet(2, 3, drain_rate=1e4)
+    params, state = br.fleet_from_servers(fleet, CATALOG)
+    return policies.load_actor_policy(tmp_path, params), params, state
+
+
+def test_chunk_hook_radius1_table_and_drift_flag(tmp_path):
+    """The hook contract, pinned at the unit level: chunk_precompute
+    prices the chunk-entry compat row plus every single-bit flip, and
+    chunk_apply resolves the LIVE row against that table — exact for
+    Hamming distance <= 1, flagged inexact (whole-chunk replay) for
+    multi-bit drift."""
+    policy, params, state = _hooked_actor(tmp_path)
+    assert policy.needs_ctx and hasattr(policy, "chunk_precompute")
+    m = 1
+    scalars = dict(
+        model=jnp.asarray([m], jnp.int32),
+        prompt_bits=jnp.asarray([2e5], jnp.float32),
+        gen_tokens=jnp.asarray([16.0], jnp.float32),
+        flops_tok=params.decode_flops_per_token[jnp.asarray([m])],
+    )
+    cctx = br.ChunkPolicyCtx(params=params, resident=state.resident,
+                             cell=jnp.asarray([0], jnp.int32), **scalars)
+    aux = policy.chunk_precompute(cctx)
+    aux_b = jax.tree.map(lambda a: a[0], aux)
+    ctx = br.PolicyCtx(
+        params=params, model=jnp.int32(m),
+        prompt_bits=jnp.float32(2e5), gen_tokens=jnp.float32(16.0),
+        flops_tok=params.decode_flops_per_token[m],
+        resident=state.resident[:, m], queue=state.queue_tokens,
+        cell=jnp.int32(0),
+    )
+    # no drift: table hit, same decision as the per-request path
+    choice0, exact0 = policy.chunk_apply(aux_b, ctx)
+    assert bool(exact0)
+    assert int(choice0) == int(policy(None, None, None, ctx))
+    # single-bit drift on an IN-CELL server: still a table hit
+    flip1 = ctx._replace(resident=ctx.resident.at[0].set(~ctx.resident[0]))
+    choice1, exact1 = policy.chunk_apply(aux_b, flip1)
+    assert bool(exact1)
+    assert int(choice1) == int(policy(None, None, None, flip1))
+    # drift on an OUT-OF-CELL server is invisible through the cell mask
+    flip_oc = ctx._replace(resident=ctx.resident.at[4].set(
+        ~ctx.resident[4]))
+    choice_oc, exact_oc = policy.chunk_apply(aux_b, flip_oc)
+    assert bool(exact_oc)
+    assert int(choice_oc) == int(choice0)
+    # two-bit drift: outside the radius-1 table -> inexact, replay
+    flip2 = flip1._replace(resident=flip1.resident.at[1].set(
+        ~flip1.resident[1]))
+    _, exact2 = policy.chunk_apply(aux_b, flip2)
+    assert not bool(exact2)
+
+
+def test_chunk_hook_forced_replay_matches_scan(tmp_path):
+    """The router's whole-chunk replay path: a hook whose chunk_apply
+    always reports inexact forces EVERY chunk through the serial
+    per-request fallback — the stream must still match the unchunked
+    scan decision for decision, state for state."""
+    base, params, state = _hooked_actor(tmp_path, seed=3)
+
+    def forced(lats, obs, queue, ctx):
+        return base(lats, obs, queue, ctx)
+
+    forced.needs_obs = False
+    forced.needs_ctx = True
+    forced.chunk_precompute = base.chunk_precompute
+    forced.chunk_apply = lambda aux_b, ctx: (base.chunk_apply(aux_b, ctx)[0],
+                                             jnp.bool_(False))
+
+    rng = np.random.default_rng(8)
+    n = 130
+    reqs = br.RequestBatch(
+        model=jnp.asarray(rng.integers(0, len(CATALOG), n), jnp.int32),
+        prompt_bits=jnp.asarray(rng.uniform(1e5, 1e6, n), jnp.float32),
+        gen_tokens=jnp.asarray(rng.integers(1, 64, n), jnp.float32),
+        cell=jnp.asarray(rng.integers(0, 2, n), jnp.int32),
+        arrival_s=jnp.asarray(np.cumsum(rng.exponential(0.01, n)),
+                              jnp.float32),
+    )
+    s0, o0 = br.route_batch(params, state, reqs, policy=base)
+    s1, o1 = br.route_batch(params, state, reqs, policy=forced, chunk=32)
+    np.testing.assert_array_equal(np.asarray(o0.choice),
+                                  np.asarray(o1.choice))
+    np.testing.assert_array_equal(np.asarray(o0.hit), np.asarray(o1.hit))
+    resident = np.asarray(s0.resident)
+    np.testing.assert_array_equal(resident, np.asarray(s1.resident))
+    # non-resident clocks are dead state (the two paths park them
+    # differently); the LIVE clocks must agree exactly
+    np.testing.assert_array_equal(
+        np.where(resident, np.asarray(s0.last_use), 0),
+        np.where(resident, np.asarray(s1.last_use), 0))
+    np.testing.assert_allclose(np.asarray(s0.queue_tokens),
+                               np.asarray(s1.queue_tokens), rtol=1e-6)

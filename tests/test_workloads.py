@@ -233,6 +233,29 @@ def test_empty_and_rejected_windows_are_masked():
     assert np.allclose(ws["mean_latency"][:2], [1.0, 3.0])  # inf masked out
     assert ws["mean_latency"][2] == np.inf                  # empty window
     assert np.allclose(ws["completion_rate"], [0.5, 0.5, 0.0])
+    # hit rate over COMPLETED requests: each window's one completed
+    # request hit, so the rejections must not drag the rate to 0.5
+    assert np.allclose(ws["residency_hit_rate"][:2], [1.0, 1.0])
+    assert np.isnan(ws["residency_hit_rate"][2])            # empty window
+
+
+def test_fully_rejected_window_reports_nan_not_zero():
+    """A fully-rejected flash-crowd window has no completed requests: a
+    completed-mean of 0.0 would read as impossibly perfect (zero energy
+    per request) — it must be nan, consistent with inf mean_latency."""
+    out = br.RouteOutcome(
+        choice=np.array([0, 1, -1, -1], np.int32),
+        latency=np.array([1.0, 3.0, np.inf, np.inf]),
+        hit=np.array([True, False, False, False]),
+    )
+    ws = br.window_stats(out, np.array([0, 0, 1, 1]), 2,
+                         completed_means={"energy_j": np.array(
+                             [2.0, 4.0, 0.0, 0.0])})
+    assert np.isclose(ws["energy_j"][0], 3.0)
+    assert np.isnan(ws["energy_j"][1])       # zero completed -> nan
+    assert ws["mean_latency"][1] == np.inf
+    assert np.isnan(ws["residency_hit_rate"][1])
+    assert ws["completion_rate"][1] == 0.0   # the rate itself is real
 
 
 # ---------------------------------------------------------------------------
