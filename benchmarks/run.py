@@ -137,6 +137,17 @@ def bench_multicell():
                               batch_sizes=(1024,), header=False)
 
 
+def bench_fleet_scale(smoke=False):
+    """Mesh-sharded fleet routing (core.mesh_router): req/s vs device
+    count at C=64 cells, N=1024 edge + cloud, B=256k requests/window on
+    a forced-8-device host; refreshes benchmarks/BENCH_fleet.json. With
+    --smoke, tiny shapes + a bitwise parity assert vs the plain scan
+    (no timing, no JSON)."""
+    from benchmarks import fleet_scale
+
+    fleet_scale.main(header=False, smoke=smoke)
+
+
 def bench_policy_serving():
     """Policy QUALITY (not req/s): greedy vs drain-aware vs a trained
     MADDPG-MATO actor checkpoint on the same bursty multi-cell stream;
@@ -224,6 +235,7 @@ SECTIONS = [
     ("score_roofline", bench_score_roofline),
     ("router_throughput", bench_router_throughput),
     ("multicell", bench_multicell),
+    ("fleet_scale", bench_fleet_scale),
     ("policy_serving", bench_policy_serving),
     ("scenarios", bench_scenarios),
     ("train_step", bench_train_step),

@@ -294,6 +294,146 @@ def fleet_from_servers(servers, catalog, clock: int = 0, time_s: float = 0.0):
 
 
 # ---------------------------------------------------------------------------
+# cell-major layout
+# ---------------------------------------------------------------------------
+class CellLayout(NamedTuple):
+    """Block shape of a CELL-MAJOR fleet.
+
+    The canonical multi-cell server ordering (what
+    ``launch.serve.make_multicell_fleet`` produces): edge cells
+    ``0..C-1`` laid out as equal-size contiguous server blocks, with
+    every fleet-wide ``CLOUD_CELL`` column trailing. In this layout each
+    cell's slice of ``FleetParams``/``FleetState`` is one contiguous
+    block — ``params.flops_per_s[c*n:(c+1)*n]`` etc. — so per-cell state
+    is directly reshapeable to ``(C, n, ...)`` and vmappable, which is
+    what ``core.mesh_router`` shards over a device mesh."""
+
+    num_cells: int   # C edge cells
+    per_cell: int    # n servers in every edge cell block
+    num_cloud: int   # trailing CLOUD_CELL servers (shared, fleet-wide)
+
+    @property
+    def num_edge(self) -> int:
+        return self.num_cells * self.per_cell
+
+    @property
+    def num_servers(self) -> int:
+        return self.num_edge + self.num_cloud
+
+
+def cell_major_order(cell) -> np.ndarray:
+    """Server permutation into cell-major order: edge cells ascending
+    (each keeping its internal order, so per-cell LRU tie-breaks are
+    preserved), all ``CLOUD_CELL`` servers last. ``order[i]`` is the OLD
+    index landing at new position ``i`` (numpy argsort convention)."""
+    cell = np.asarray(cell)
+    key = np.where(cell == CLOUD_CELL, np.iinfo(np.int64).max,
+                   cell.astype(np.int64))
+    return np.argsort(key, kind="stable")
+
+
+def cell_layout(params: FleetParams) -> CellLayout:
+    """Validate that ``params`` is cell-major and return its block shape.
+
+    Requirements: edge cell ids are exactly ``0..C-1``, every cell owns
+    the same number of servers in one contiguous ascending block, and
+    all ``CLOUD_CELL`` servers trail the edge blocks. Raises
+    ``ValueError`` otherwise — ``cell_major_order`` produces the fixing
+    permutation (see ``permute_fleet``); unequal cell sizes cannot be
+    blocked and need the fleet padded to a common size. An untopologied
+    fleet (``params.cell is None``) is one cell with no cloud."""
+    if params.cell is None:
+        return CellLayout(num_cells=1,
+                          per_cell=int(params.flops_per_s.shape[0]),
+                          num_cloud=0)
+    cell = np.asarray(params.cell)
+    n_total = int(cell.shape[0])
+    is_cloud = cell == CLOUD_CELL
+    num_cloud = int(is_cloud.sum())
+    if num_cloud and not is_cloud[n_total - num_cloud:].all():
+        raise ValueError(
+            "fleet is not cell-major: CLOUD_CELL servers must trail the "
+            "edge blocks (apply cell_major_order/permute_fleet)"
+        )
+    edge = cell[: n_total - num_cloud]
+    if edge.size == 0:
+        raise ValueError("fleet has no edge servers")
+    c = int(edge.max()) + 1
+    counts = np.bincount(edge, minlength=c) if edge.min() >= 0 else None
+    if counts is None or (counts == 0).any():
+        raise ValueError(
+            f"edge cell ids must be exactly 0..C-1, got "
+            f"{sorted(set(edge.tolist()))}"
+        )
+    if not (counts == counts[0]).all():
+        raise ValueError(
+            "cells must be equal-sized for the blocked layout, got "
+            f"per-cell counts {counts.tolist()}; pad the fleet"
+        )
+    per = int(counts[0])
+    if not np.array_equal(edge, np.repeat(np.arange(c), per)):
+        raise ValueError(
+            "edge servers are not grouped into contiguous ascending cell "
+            "blocks (apply cell_major_order/permute_fleet)"
+        )
+    return CellLayout(num_cells=c, per_cell=per, num_cloud=num_cloud)
+
+
+def permute_fleet(params: FleetParams, state: FleetState, order):
+    """Apply a server permutation to every per-server axis of
+    ``(params, state)`` — e.g. ``cell_major_order(params.cell)`` to bring
+    an arbitrary fleet into the blocked layout. Choices reported against
+    the permuted fleet map back through ``order[choice]``."""
+    order = jnp.asarray(np.asarray(order), jnp.int32)
+    new_params = params._replace(
+        flops_per_s=params.flops_per_s[order],
+        uplink_bps=params.uplink_bps[order],
+        backhaul_bps=params.backhaul_bps[order],
+        cache_slots=params.cache_slots[order],
+        cell=None if params.cell is None else params.cell[order],
+        drain_rate=(None if params.drain_rate is None
+                    else params.drain_rate[order]),
+    )
+    new_state = state._replace(
+        resident=state.resident[order],
+        last_use=state.last_use[order],
+        queue_tokens=state.queue_tokens[order],
+    )
+    return new_params, new_state
+
+
+def local_block_params(params: FleetParams, layout: CellLayout,
+                       block: int = 0) -> FleetParams:
+    """One cell block's LOCAL fleet view: its ``per_cell`` edge servers
+    relabeled to cell 0, plus the shared cloud columns (cell stays
+    ``CLOUD_CELL``). Every block shares this geometry, so a policy built
+    against the block-0 template (``core.policies.
+    actor_policy_for_cell_blocks``) serves all cells under
+    ``core.mesh_router.route_batch_sharded``."""
+    c, n, nc = layout.num_cells, layout.per_cell, layout.num_cloud
+    lo, hi = block * n, (block + 1) * n
+    edge_total = c * n
+
+    def take(x):
+        blk = x[lo:hi]
+        return jnp.concatenate([blk, x[edge_total:edge_total + nc]]) if nc \
+            else blk
+
+    local_cell = jnp.asarray(np.concatenate(
+        [np.zeros(n, np.int32), np.full(nc, CLOUD_CELL, np.int32)]
+    ))
+    return params._replace(
+        flops_per_s=take(params.flops_per_s),
+        uplink_bps=take(params.uplink_bps),
+        backhaul_bps=take(params.backhaul_bps),
+        cache_slots=take(params.cache_slots),
+        cell=local_cell,
+        drain_rate=(None if params.drain_rate is None
+                    else take(params.drain_rate)),
+    )
+
+
+# ---------------------------------------------------------------------------
 # vectorised scoring
 # ---------------------------------------------------------------------------
 def _static_costs(params: FleetParams, reqs: RequestBatch):
@@ -556,6 +696,16 @@ def route_batch(
 def _route_batch(params, state, reqs, drain_tokens, *, policy, actor, chunk,
                  unroll, backend, speculative=True):
     policy_fn = _resolve_policy(policy, actor)
+    return _route_core(params, state, reqs, drain_tokens, policy_fn,
+                       chunk=chunk, unroll=unroll, backend=backend,
+                       speculative=speculative)
+
+
+def _route_core(params, state, reqs, drain_tokens, policy_fn, *, chunk,
+                unroll, backend, speculative=True):
+    """The traceable body of :func:`route_batch` with the policy already
+    resolved to a callable — ``core.mesh_router`` vmaps exactly this over
+    cell blocks, so it must stay jit-free and policy-static."""
     dtype = jnp.result_type(reqs.prompt_bits, params.uplink_bps)
 
     gen_tokens = reqs.gen_tokens.astype(dtype)                  # (B,)

@@ -1,0 +1,467 @@
+"""Mesh-sharded fleet routing: cell blocks over devices, cloud reconciled.
+
+``core.batch_router.route_batch`` routes a whole multi-cell fleet in one
+jitted call — on ONE device. This module shards that call across a
+device mesh: the fleet's cell blocks (the cell-major layout,
+``batch_router.CellLayout``) and their request buckets are partitioned
+over a 1-axis ``("cells",)`` mesh built by ``distributed.sharding.
+make_mesh``; each device routes its cells' traffic locally through the
+UNCHANGED ``_route_core`` (same scan / chunked two-phase / speculative
+parallel commit), and only the shared ``CLOUD_CELL`` columns are
+reconciled afterwards.
+
+Window semantics
+----------------
+One ``route_batch_sharded`` call is one serving WINDOW (what
+``workloads.simulate`` already feeds ``route_batch``). Within a window:
+
+* each cell's requests commit sequentially, in arrival order, against
+  the cell's own server block — exactly the single-device semantics,
+  because cells are invisible to each other's requests;
+* each cell prices the shared cloud columns against the WINDOW-ENTRY
+  snapshot of the cloud queue plus the cell's OWN cloud commits. Cells
+  do not observe each other's cloud backlog until the window closes —
+  the one relaxation that makes the batch parallel across cells.
+
+At window close the shared columns are reconciled:
+
+* **cloud backlog** — the per-cell backlog commits are gathered (an
+  all-reduce-sized exchange: the committed choices plus one queue row
+  per cell) and replayed in global arrival order by a cheap masked-add
+  scan, so the carried cloud queue is the EXACT sequential fold of
+  every committed token — bitwise what the single-device path computes
+  for the same choices, including the wall-clock drain;
+* **cloud LRU** — per-cell ``last_use`` copies hold globally-ordered
+  clocks (see below), so an elementwise max is the exact latest-use;
+* **cloud residency** — validated full (``launch.serve.
+  make_cloud_server`` guarantees it), hence immutable: a full row can
+  never install or evict, so the per-cell copies cannot diverge.
+
+Exactness
+---------
+Decisions, residency, LRU clocks, queues, rejections and the carried
+clock are BIT-IDENTICAL to single-device ``route_batch`` (and hence the
+scalar oracle) whenever the window's cloud feedback does not cross
+cells — cloud-free fleets, or streams whose cloud commits all originate
+in one cell — and independent of the device count ALWAYS: the same
+window routed on 1, 2, 4 or 8 devices produces identical bits, because
+per-cell work is data-independent across cells and the reconciliation
+reduces in a fixed, device-count-free order. With cross-cell cloud
+contention the carried state is still exact for the committed choices;
+the choices themselves follow the window semantics above. With a
+nonzero ``drain_rate`` the per-cell decay composes the same real
+arithmetic in fewer floating-point steps (one ``dt`` per own-cell
+arrival instead of one per global arrival), so edge queues agree to
+float tolerance rather than bitwise; ``drain_rate == 0`` (with or
+without arrival stamps) is exact.
+
+LRU clocks stay globally ordered through a post-scan remap: each cell
+routes with LOCAL clocks ``clock0 + 1 .. clock0 + Bc`` (monotone in its
+own stream, so every eviction argmin is unchanged), and committed
+entries — recognisable as ``last_use > clock0`` — are rewritten to
+``clock0 + 1 + global_position`` through the bucket's request-position
+map before the blocks are reassembled.
+
+The legacy per-request ``drain_tokens`` argument is rejected: it drains
+EVERY server after EVERY request — a globally-sequential semantics that
+cannot be cell-partitioned. Use the time-based ``FleetParams.
+drain_rate`` instead.
+
+Layout contract
+---------------
+The fleet must be cell-major (``batch_router.cell_layout``): equal-size
+edge cell blocks ``0..C-1`` contiguous, cloud columns trailing —
+``launch.serve.make_multicell_fleet`` builds exactly this. Fleets in
+any other server order are permuted in (``cell_major_order``) and the
+returned state/choices permuted back, so the call is order-preserving
+for the caller. Requests need ``RequestBatch.cell`` when C > 1;
+out-of-range cells (and requests arriving when no cell matches) see
+only the cloud columns, exactly like the single-device mask. Cells
+that don't divide the device count are padded with inert all-padding
+blocks; padding requests carry ``prompt_bits = +inf`` so every score is
+infeasible and the commit machinery provably never touches state.
+
+``benchmarks/fleet_scale.py`` measures req/s vs device count at fleet
+scale; ``docs/sharding.md`` is the guide; ``tests/
+test_multicell_router.py`` locks the equivalences down on a forced
+8-device host.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import batch_router as br
+from repro.core.router import CLOUD_CELL
+from repro.distributed import sharding
+
+#: Inner cell id for requests that must see ONLY the cloud columns:
+#: orphans (out-of-range cells) and bucket padding. Edge blocks are
+#: relabeled to cell 0 and the cloud keeps CLOUD_CELL (-1), so -2 can
+#: never match a server.
+_ORPHAN_CELL = -2
+
+#: Request buckets are padded to a multiple of this so window-to-window
+#: jitter in the per-cell request count doesn't recompile the mesh call.
+_BUCKET_ROUND = 16
+
+
+@functools.lru_cache(maxsize=None)
+def cells_mesh(num_devices: int):
+    """1-axis ``("cells",)`` mesh over the first ``num_devices`` local
+    devices (an explicit subset: ``make_mesh`` refuses to silently
+    undersubscribe the platform)."""
+    return sharding.make_mesh(
+        (num_devices,), ("cells",),
+        devices=tuple(jax.devices()[:num_devices]),
+    )
+
+
+def local_template_params(params: br.FleetParams) -> br.FleetParams:
+    """The block-0 local fleet view every cell shares geometrically:
+    ``per_cell`` edge servers relabeled cell 0 + the cloud columns.
+    Build policies for the sharded router against THIS template (see
+    ``core.policies.actor_policy_for_cell_blocks``)."""
+    return br.local_block_params(params, br.cell_layout(params), 0)
+
+
+def _bucket_requests(reqs: br.RequestBatch, layout: br.CellLayout,
+                     c_pad: int, time0: float, has_time: bool):
+    """Host-side bucketing of a (B,) request stream into dense
+    ``(c_pad, bc)`` per-cell buckets (numpy; the result feeds the jitted
+    mesh call).
+
+    Real requests keep their arrival order inside their cell's bucket
+    and carry inner cell 0; orphans (out-of-range ``cell``) are spread
+    deterministically (global index mod C — device-count independent)
+    and carry ``_ORPHAN_CELL`` so they see only the cloud. Trailing
+    padding rows carry ``prompt_bits = +inf`` (every score infeasible →
+    rejected → zero state mutation) and an arrival stamp no later than
+    the bucket's running clock (``dt = 0`` → the wall-clock decay is a
+    bitwise no-op). ``gpos`` maps each bucket slot back to its global
+    stream position (-1 on padding) — the outcome scatter and the LRU
+    clock remap both key off it."""
+    c = layout.num_cells
+    b = int(reqs.model.shape[0])
+    model = np.asarray(reqs.model)
+    prompt = np.asarray(reqs.prompt_bits)
+    gen = np.asarray(reqs.gen_tokens)
+    if reqs.cell is not None:
+        rcell = np.asarray(reqs.cell).astype(np.int64)
+    else:
+        rcell = np.zeros(b, np.int64)
+    in_range = (rcell >= 0) & (rcell < c)
+    bucket = np.where(in_range, rcell, np.arange(b, dtype=np.int64) % c)
+    counts = np.bincount(bucket, minlength=c)
+    bc = -(-max(int(counts.max()), 1) // _BUCKET_ROUND) * _BUCKET_ROUND
+    order = np.argsort(bucket, kind="stable")
+    starts = np.zeros(c + 1, np.int64)
+    starts[1:] = np.cumsum(counts)
+    sortedb = bucket[order]
+    slot = np.arange(b, dtype=np.int64) - starts[sortedb]
+
+    gpos = np.full((c_pad, bc), -1, np.int32)
+    model_b = np.zeros((c_pad, bc), model.dtype)
+    prompt_b = np.full((c_pad, bc), np.inf, prompt.dtype)
+    gen_b = np.zeros((c_pad, bc), gen.dtype)
+    icell_b = np.full((c_pad, bc), _ORPHAN_CELL, np.int32)
+    gpos[sortedb, slot] = order
+    model_b[sortedb, slot] = model[order]
+    prompt_b[sortedb, slot] = prompt[order]
+    gen_b[sortedb, slot] = gen[order]
+    icell_b[sortedb, slot] = np.where(in_range[order], 0, _ORPHAN_CELL)
+
+    arr_b = None
+    if has_time:
+        arr = np.asarray(reqs.arrival_s)
+        arr_b = np.zeros((c_pad, bc), arr.dtype)
+        arr_b[sortedb, slot] = arr[order]
+        # padding arrivals: the bucket's latest stamp (or the fleet
+        # clock) — never ahead of the inner running time, so dt == 0
+        bmax = np.full(c_pad, time0, arr.dtype)
+        if b:
+            np.maximum.at(bmax, sortedb, arr[order])
+        pad_counts = np.zeros(c_pad, np.int64)
+        pad_counts[:c] = counts
+        padmask = np.arange(bc)[None, :] >= pad_counts[:, None]
+        arr_b = np.where(padmask, bmax[:, None], arr_b)
+    return model_b, prompt_b, gen_b, icell_b, arr_b, gpos
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "layout", "c_pad", "policy", "actor",
+                     "chunk", "unroll", "backend", "speculative"),
+)
+def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
+                   gpos_b, gen_g, arr_g, *, mesh, axis, layout, c_pad, policy,
+                   actor, chunk, unroll, backend, speculative):
+    policy_fn = br._resolve_policy(policy, actor)
+    c, n, nc = layout.num_cells, layout.per_cell, layout.num_cloud
+    ne, m = layout.num_edge, layout.per_cell + layout.num_cloud
+    bc = int(model_b.shape[1])
+    b = int(gen_g.shape[0])
+    dtype = jnp.result_type(prompt_b, params.uplink_bps)
+    has_time = params.drain_rate is not None and arr_b is not None
+    clock0 = state.clock
+    time0 = jnp.asarray(
+        state.time_s if state.time_s is not None else 0.0, dtype
+    )
+    queue0 = state.queue_tokens.astype(dtype)
+
+    def blocks(x):
+        """(N, ...) server-major -> (c_pad, n+nc, ...) cell blocks, the
+        cloud rows replicated into every block, padded cells inert
+        copies of block 0 (their requests are all padding)."""
+        blk = x[:ne].reshape((c, n) + x.shape[1:])
+        if nc:
+            cloud = jnp.broadcast_to(x[ne:][None], (c, nc) + x.shape[1:])
+            blk = jnp.concatenate([blk, cloud], axis=1)
+        if c_pad > c:
+            blk = jnp.concatenate(
+                [blk, jnp.broadcast_to(blk[:1], (c_pad - c,) + blk.shape[1:])]
+            )
+        return blk
+
+    local_cell = jnp.concatenate([
+        jnp.zeros((n,), jnp.int32),
+        jnp.full((nc,), CLOUD_CELL, jnp.int32),
+    ]) if nc else jnp.zeros((n,), jnp.int32)
+
+    has_drain = params.drain_rate is not None
+    ins = [
+        blocks(params.flops_per_s), blocks(params.uplink_bps),
+        blocks(params.backhaul_bps), blocks(params.cache_slots),
+        blocks(state.resident), blocks(state.last_use), blocks(queue0),
+        model_b, prompt_b, gen_b, icell_b, gpos_b,
+    ]
+    if has_drain:
+        ins.append(blocks(params.drain_rate))
+    if has_time:
+        ins.append(arr_b)
+    n_shard = len(ins)
+    repl = [params.size_bits, params.decode_flops_per_token, clock0, time0,
+            local_cell]
+
+    def device_fn(*args):
+        sh = args[:n_shard]
+        size_bits, dflops, clk0, t0, lcell = args[n_shard:]
+
+        def one_cell(cell_args):
+            (fl, up, bh, slots, res, lu, q, mdl, pr, gn, icl,
+             gp, *rest) = cell_args
+            dr = rest[0] if has_drain else None
+            ar = rest[-1] if has_time else None
+            p = br.FleetParams(
+                flops_per_s=fl, uplink_bps=up, backhaul_bps=bh,
+                cache_slots=slots, size_bits=size_bits,
+                decode_flops_per_token=dflops, cell=lcell, drain_rate=dr,
+            )
+            s = br.FleetState(resident=res, last_use=lu, queue_tokens=q,
+                              clock=clk0, time_s=t0)
+            r = br.RequestBatch(model=mdl, prompt_bits=pr, gen_tokens=gn,
+                                cell=icl, arrival_s=ar)
+            st, out = br._route_core(p, s, r, None, policy_fn, chunk=chunk,
+                                     unroll=unroll, backend=backend,
+                                     speculative=speculative)
+            # local -> global LRU clock remap: commits from THIS window
+            # (> clock0 — stale entries, including pre-window values,
+            # never exceed the entry clock) are rewritten to clock0 + 1
+            # + global stream position through the bucket position map
+            cmap = clk0 + 1 + gp
+            lu2 = st.last_use
+            fresh = lu2 > clk0
+            lu2 = jnp.where(
+                fresh, cmap[jnp.clip(lu2 - clk0 - 1, 0, bc - 1)], lu2
+            )
+            return (st.resident, lu2, st.queue_tokens.astype(dtype),
+                    out.choice, out.latency, out.hit)
+
+        return jax.vmap(one_cell)(sh)
+
+    routed = sharding.shard_map(
+        device_fn, mesh=mesh,
+        in_specs=(P(axis),) * n_shard + (P(),) * len(repl),
+        out_specs=(P(axis),) * 6, check_vma=False,
+    )(*ins, *repl)
+    res_o, lu_o, q_o, ch_o, lat_o, hit_o = routed
+
+    # --- reassemble the cell-major fleet state (real cells only) ---
+    num_k = int(params.size_bits.shape[0])
+    resident = res_o[:c, :n].reshape(ne, num_k)
+    last_use = lu_o[:c, :n].reshape(ne, num_k)
+    queue = q_o[:c, :n].reshape(ne)
+
+    # --- scatter outcomes back to the caller's stream order ---
+    imap = (jnp.arange(c_pad, dtype=jnp.int32) * n)[:, None] \
+        + jnp.arange(n, dtype=jnp.int32)[None, :]
+    if nc:
+        imap = jnp.concatenate([
+            imap,
+            jnp.broadcast_to(ne + jnp.arange(nc, dtype=jnp.int32),
+                             (c_pad, nc)),
+        ], axis=1)
+    ch_glob = jnp.where(
+        ch_o >= 0,
+        jnp.take_along_axis(imap, jnp.clip(ch_o, 0, m - 1), axis=1),
+        -1,
+    )
+    gposf = gpos_b.reshape(-1)
+    safe = jnp.where(gposf >= 0, gposf, b)  # b: out of bounds -> dropped
+    choice = jnp.zeros((b,), jnp.int32).at[safe].set(
+        ch_glob.reshape(-1), mode="drop")
+    latency = jnp.zeros((b,), dtype).at[safe].set(
+        lat_o.reshape(-1).astype(dtype), mode="drop")
+    hit = jnp.zeros((b,), bool).at[safe].set(hit_o.reshape(-1), mode="drop")
+
+    # --- cloud reconciliation ---
+    if nc:
+        # residency: validated full at entry -> immutable; carry as-is
+        resident = jnp.concatenate([resident, state.resident[ne:]])
+        # LRU: per-cell copies hold globally-ordered clocks after the
+        # remap, so the elementwise max IS the latest use
+        lu_cloud = jnp.maximum(jnp.max(lu_o[:c, n:], axis=0),
+                               state.last_use[ne:])
+        last_use = jnp.concatenate([last_use, lu_cloud])
+        # backlog: replay the committed cloud choices in global arrival
+        # order — the exact sequential fold the single-device scan
+        # computes, decay included (see module docstring)
+        cloud_ids = ne + jnp.arange(nc, dtype=jnp.int32)
+        rate_cloud = (params.drain_rate[ne:].astype(dtype)
+                      if has_time else None)
+
+        def replay_step(carry, xs):
+            qc, trun = carry
+            if has_time:
+                ch_i, g_i, a_i = xs
+                dt = jnp.maximum(a_i - trun, 0.0)
+                trun = jnp.maximum(trun, a_i)
+                qc = jnp.maximum(qc - rate_cloud * dt, 0.0)
+            else:
+                ch_i, g_i = xs
+            qc = qc + jnp.where(cloud_ids == ch_i, g_i, 0.0)
+            return (qc, trun), None
+
+        xs = (choice, gen_g.astype(dtype))
+        if has_time:
+            xs += (arr_g.astype(dtype),)
+        (q_cloud, _), _ = jax.lax.scan(
+            replay_step, (queue0[ne:], time0), xs, unroll=min(64, b))
+        queue = jnp.concatenate([queue, q_cloud])
+
+    clock_f = clock0 + jnp.asarray(b, clock0.dtype)
+    if has_time:
+        time_f = jnp.maximum(time0, jnp.max(arr_g.astype(dtype)))
+    else:
+        time_f = time0
+    new_state = br.FleetState(resident=resident, last_use=last_use,
+                              queue_tokens=queue, clock=clock_f,
+                              time_s=time_f)
+    return new_state, br.RouteOutcome(choice=choice, latency=latency,
+                                      hit=hit)
+
+
+def route_batch_sharded(
+    params: br.FleetParams,
+    state: br.FleetState,
+    reqs: br.RequestBatch,
+    drain_tokens=None,
+    *,
+    mesh=None,
+    num_devices: Optional[int] = None,
+    policy="greedy",
+    actor=None,
+    chunk: Optional[int] = None,
+    unroll: int = 8,
+    backend: Optional[str] = None,
+    speculative: bool = True,
+):
+    """Route one request window across a device mesh; returns
+    ``(state, outcome)`` with the same pytrees as ``route_batch``.
+
+    The fleet's cell blocks and their request buckets are partitioned
+    over the mesh's leading axis; each device routes its cells locally
+    through the unchanged scan/chunked/speculative machinery, and the
+    shared cloud columns are reconciled at window close (module
+    docstring: window semantics, exactness, layout contract).
+
+    Mesh selection: pass ``mesh`` (leading axis = the cell axis) or
+    ``num_devices`` (a 1-axis ``("cells",)`` mesh over the first that
+    many local devices); the default uses every local device. Policy /
+    ``chunk`` / ``unroll`` / ``backend`` / ``speculative`` knobs match
+    ``route_batch`` and configure the per-cell inner path.
+    """
+    if drain_tokens is not None:
+        raise ValueError(
+            "drain_tokens drains every server after every request — a "
+            "globally-sequential semantics the sharded router cannot "
+            "honour; use the time-based FleetParams.drain_rate instead"
+        )
+    backend = br.resolve_backend(backend)
+    if mesh is None:
+        d = int(num_devices) if num_devices else len(jax.devices())
+        mesh = cells_mesh(d)
+    else:
+        d = int(mesh.shape[mesh.axis_names[0]])
+    axis = mesh.axis_names[0]
+
+    order = None
+    try:
+        layout = br.cell_layout(params)
+    except ValueError:
+        if params.cell is None:
+            raise
+        order = br.cell_major_order(params.cell)
+        params, state = br.permute_fleet(params, state, order)
+        layout = br.cell_layout(params)  # unequal cells still raise here
+    c = layout.num_cells
+
+    if layout.num_cells > 1 and reqs.cell is None:
+        raise ValueError("multi-cell sharded routing needs RequestBatch.cell")
+    if layout.num_cloud and not np.asarray(
+            state.resident)[layout.num_edge:].all():
+        raise ValueError(
+            "sharded routing requires full-residency cloud columns (see "
+            "launch.serve.make_cloud_server): a cloud row that can still "
+            "install or evict would diverge across its per-cell copies"
+        )
+
+    b = int(reqs.model.shape[0])
+    if b == 0:  # nothing to shard; keep the single-device fast path
+        return br.route_batch(params, state, reqs, policy=policy,
+                              actor=actor, chunk=chunk, unroll=unroll,
+                              backend=backend, speculative=speculative)
+
+    c_pad = -(-c // d) * d
+    has_time = params.drain_rate is not None and reqs.arrival_s is not None
+    time0 = float(np.asarray(state.time_s)) if state.time_s is not None \
+        else 0.0
+    model_b, prompt_b, gen_b, icell_b, arr_b, gpos = _bucket_requests(
+        reqs, layout, c_pad, time0, has_time)
+
+    new_state, out = _sharded_route(
+        params, state,
+        jnp.asarray(model_b), jnp.asarray(prompt_b), jnp.asarray(gen_b),
+        jnp.asarray(icell_b),
+        None if arr_b is None else jnp.asarray(arr_b),
+        jnp.asarray(gpos),
+        reqs.gen_tokens,
+        reqs.arrival_s if has_time else None,
+        mesh=mesh, axis=axis, layout=layout, c_pad=c_pad, policy=policy,
+        actor=actor, chunk=chunk, unroll=unroll, backend=backend,
+        speculative=speculative,
+    )
+
+    if order is not None:  # restore the caller's server ordering
+        inv = np.argsort(order)
+        _, new_state = br.permute_fleet(params, new_state, inv)
+        order_j = jnp.asarray(order, jnp.int32)
+        ch = out.choice
+        out = out._replace(choice=jnp.where(
+            ch >= 0, order_j[jnp.clip(ch, 0, order_j.shape[0] - 1)], -1))
+    return new_state, out

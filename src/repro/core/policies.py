@@ -216,6 +216,19 @@ def _agent_slice(stacked, agent: int):
     return jax.tree.map(lambda x: jnp.asarray(x)[agent], stacked)
 
 
+# ``optimization_barrier`` has no batching rule on this JAX, so the bare
+# primitive breaks the mesh router's per-cell vmap; custom_vmap makes the
+# barrier commute with vmap (it is the identity on values either way).
+@jax.custom_batching.custom_vmap
+def _fusion_barrier(x):
+    return jax.lax.optimization_barrier(x)
+
+
+@_fusion_barrier.def_vmap
+def _fusion_barrier_vmap(axis_size, in_batched, x):
+    return jax.lax.optimization_barrier(x), in_batched[0]
+
+
 def make_actor_policy(actor_params, spec: ObsSpec, fleet_params, *,
                       agent: int = 0, defaults: Optional[ObsDefaults] = None,
                       model_aware: bool = True):
@@ -321,7 +334,7 @@ def make_actor_policy(actor_params, spec: ObsSpec, fleet_params, *,
         # barrier: keep the concat-built obs rows OUT of the matmul
         # fusion — fused, XLA lowers the contraction as a loop nest
         # instead of one gemm call (measured ~4x slower end to end)
-        rows = jax.lax.optimization_barrier(_obs_rows(cctx, idx, compat))
+        rows = _fusion_barrier(_obs_rows(cctx, idx, compat))
         out = networks.mlp_apply(mlp, rows)
         target = jnp.argmax(out[..., 1: n_ess + 1], axis=-1)  # (c, V)
         choice = jnp.take_along_axis(idx, target, axis=1)    # (c, V)
@@ -410,6 +423,44 @@ def load_actor_policy(ckpt_dir, fleet_params, *, step: Optional[int] = None,
         params, spec, fleet_params, agent=agent,
         model_aware=extra.get("model_aware", True),
     )
+
+
+def actor_policy_for_cell_blocks(actor_params, spec: ObsSpec, fleet_params,
+                                 **kwargs):
+    """Actor policy for the cell-major sharded router: ONE policy closure
+    that serves EVERY cell block of ``core.mesh_router.route_batch_sharded``.
+
+    Under the mesh the per-request ``PolicyCtx`` carries a LOCAL view — a
+    single cell's server block (relabelled cell 0) plus the shared cloud
+    columns — so the flat index map baked by ``make_actor_policy`` must be
+    built against that local geometry, not the global fleet. Since the
+    actor reads the fleet ONLY through live ctx values (residency, queue,
+    flops all flow through ``PolicyCtx``; ``fleet_params`` fixes nothing
+    but index geometry), the closure built on block 0's template is
+    bitwise-correct for every other equal-size block too.
+
+    Requires a single-cell-trained actor (``spec.num_cells == 1``) whose
+    ``spec.num_ess`` matches the fleet's per-cell block size — the only
+    topology where all blocks share one index map. The matched-topology
+    mode of ``cell_index_map`` (actor sees ALL cells at once) cannot be
+    served from per-cell shards; route those fleets unsharded.
+    """
+    from repro.core import batch_router as br
+
+    layout = br.cell_layout(fleet_params)
+    if spec.num_cells != 1:
+        raise ValueError(
+            f"sharded serving needs a single-cell-trained actor "
+            f"(spec.num_cells == 1, one index map shared by every block); "
+            f"got num_cells={spec.num_cells} — route this fleet unsharded"
+        )
+    if spec.num_ess != layout.per_cell:
+        raise ValueError(
+            f"actor was trained on num_ess={spec.num_ess} edge servers but "
+            f"the fleet's cell blocks hold {layout.per_cell}"
+        )
+    local = br.local_block_params(fleet_params, layout, 0)
+    return make_actor_policy(actor_params, spec, local, **kwargs)
 
 
 # ---------------------------------------------------------------------------

@@ -37,7 +37,30 @@ def axis_types_kwargs(n_axes: int) -> dict:
 
 
 def make_mesh(axis_shapes, axis_names, *, devices=None):
-    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    """``jax.make_mesh`` with explicit-Auto axis types where supported.
+
+    Unlike raw ``jax.make_mesh`` — which silently builds the mesh over a
+    SUBSET of the platform's devices whenever ``prod(axis_shapes)`` is
+    smaller than ``len(jax.devices())`` (the rest of the fleet sits idle
+    with no error) — the axis shapes here must account for every device
+    the mesh draws from. To deliberately undersubscribe, pass the subset
+    explicitly: ``devices=jax.devices()[:n]``.
+    """
+    want = 1
+    for s in axis_shapes:
+        want *= int(s)
+    avail = list(devices) if devices is not None else jax.devices()
+    if want != len(avail):
+        source = (
+            "the devices argument supplies"
+            if devices is not None
+            else "the platform exposes"
+        )
+        raise ValueError(
+            f"mesh axis shapes {tuple(axis_shapes)} require {want} device(s) "
+            f"but {source} {len(avail)}; pass an explicit subset "
+            "(devices=jax.devices()[:n]) to build a smaller mesh"
+        )
     kwargs = {} if devices is None else {"devices": devices}
     kwargs.update(axis_types_kwargs(len(axis_names)))
     try:

@@ -34,6 +34,8 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_host_mesh(model: int = 1):
     """Tiny mesh over however many local devices exist (tests/examples)."""
-    n = len(jax.devices())
-    data = n // model
-    return sharding.make_mesh((data, model), ("data", "model"))
+    devices = jax.devices()
+    data = len(devices) // model
+    # explicit subset: make_mesh refuses to undersubscribe silently
+    return sharding.make_mesh((data, model), ("data", "model"),
+                              devices=devices[: data * model])

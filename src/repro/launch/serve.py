@@ -132,19 +132,29 @@ def make_multicell_fleet(n_cells: int, servers_per_cell: int, catalog,
     return fleet
 
 
-def resolve_policy_flag(policy, fleet_params):
+def resolve_policy_flag(policy, fleet_params, *, sharded=False):
     """CLI policy flag -> ``route_batch`` policy. ``actor:<ckpt_dir>``
     restores a trained MADDPG-MATO actor through ``core.policies``;
-    everything else passes through (builtin name or callable)."""
+    everything else passes through (builtin name or callable).
+
+    ``sharded=True`` builds the actor against the cell-block-local
+    geometry (``policies.actor_policy_for_cell_blocks``) so the one
+    closure serves every shard of ``route_batch_sharded``."""
     if isinstance(policy, str) and policy.startswith("actor:"):
-        return policies.load_actor_policy(policy.split(":", 1)[1],
-                                          fleet_params)
+        ckpt = policy.split(":", 1)[1]
+        if not sharded:
+            return policies.load_actor_policy(ckpt, fleet_params)
+        params, spec, extra = policies.load_actor_checkpoint(ckpt)
+        return policies.actor_policy_for_cell_blocks(
+            params, spec, fleet_params,
+            model_aware=extra.get("model_aware", True),
+        )
     return policy
 
 
 def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
           gen_tokens=8, n_cells=1, drain_rate=0.0, arrival_rate=None,
-          chunk=None, backend=None, scenario="steady"):
+          chunk=None, backend=None, scenario="steady", mesh=None):
     # serve the edge-suitable (small) members of the catalogue
     edge_archs = ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
     catalog = build_catalog(edge_archs)
@@ -155,7 +165,7 @@ def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
     else:
         fleet = make_fleet(n_servers, catalog, drain_rate=drain_rate)
     fleet_params, fleet_state = batch_router.fleet_from_servers(fleet, catalog)
-    policy = resolve_policy_flag(policy, fleet_params)
+    policy = resolve_policy_flag(policy, fleet_params, sharded=mesh is not None)
 
     # local reduced models actually generate tokens for routed requests
     models = {}
@@ -177,15 +187,26 @@ def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
     # route the WHOLE batch (all cells) in one jitted call
     # (sequential-commit scan). With drain_rate > 0 the queues decay by
     # drain_rate * dt between arrivals; otherwise each routed request
-    # drains the fleet like the old per-request loop.
+    # drains the fleet like the old per-request loop. Under --mesh the
+    # batch is ONE reconciliation window of the sharded router, which
+    # takes no per-request drain_tokens (docs/sharding.md) — drain only
+    # through drain_rate there.
     t0 = time.time()
-    fleet_state, out = batch_router.route_batch(
-        fleet_params, fleet_state, reqs,
-        None if drain_rate > 0.0
-        else float(np.mean(np.asarray(reqs.gen_tokens))) * len(fleet)
-        / max(num_requests, 1),
-        policy=policy, chunk=chunk, backend=backend,
-    )
+    if mesh is not None:
+        from repro.core import mesh_router
+
+        fleet_state, out = mesh_router.route_batch_sharded(
+            fleet_params, fleet_state, reqs, num_devices=mesh,
+            policy=policy, chunk=chunk, backend=backend,
+        )
+    else:
+        fleet_state, out = batch_router.route_batch(
+            fleet_params, fleet_state, reqs,
+            None if drain_rate > 0.0
+            else float(np.mean(np.asarray(reqs.gen_tokens))) * len(fleet)
+            / max(num_requests, 1),
+            policy=policy, chunk=chunk, backend=backend,
+        )
     jax.block_until_ready(out.choice)
     route_s = time.time() - t0
 
@@ -267,6 +288,12 @@ def main():
                          "or xla)")
     ap.add_argument("--no-execute", action="store_true",
                     help="route only (no local generation)")
+    ap.add_argument("--mesh", type=int, default=None, metavar="D",
+                    help="shard routing over D local devices "
+                         "(core.mesh_router; the batch is one "
+                         "reconciliation window — see docs/sharding.md). "
+                         "CPU hosts expose extra devices via "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8")
     args = ap.parse_args()
     stats = serve(args.requests, args.servers, args.policy,
                   execute=not args.no_execute, seed=args.seed,
@@ -274,7 +301,8 @@ def main():
                   n_cells=args.cells,
                   drain_rate=args.drain_rate,
                   arrival_rate=args.arrival_rate, chunk=args.chunk,
-                  backend=args.backend, scenario=args.scenario)
+                  backend=args.backend, scenario=args.scenario,
+                  mesh=args.mesh)
     for k, v in stats.items():
         print(f"{k}: {v}")
 

@@ -102,7 +102,8 @@ def simulate(params: br.FleetParams, state: br.FleetState,
              window_requests: int = 256, drain_tokens=None,
              chunk: Optional[int] = None, unroll: int = 8,
              backend: Optional[str] = None,
-             cloud_index: Optional[int] = None):
+             cloud_index: Optional[int] = None,
+             mesh=None, num_devices: Optional[int] = None):
     """Route ``reqs`` through W sequential windows, carrying the fleet
     state across window boundaries; returns ``(state, outcome, series)``
     with ``outcome`` the concatenated ``RouteOutcome`` of the whole
@@ -112,7 +113,23 @@ def simulate(params: br.FleetParams, state: br.FleetState,
     ``chunk``/``unroll``/``backend``, per-request ``drain_tokens``);
     ``cloud_index`` (the cloud column's server index, conventionally the
     last) adds the cloud-fallback rate to the series and excludes that
-    column from the queue percentiles."""
+    column from the queue percentiles.
+
+    ``mesh``/``num_devices`` switch each window to the mesh-sharded
+    router (``core.mesh_router.route_batch_sharded``): a simulator
+    window IS the sharded router's reconciliation window, so cells see
+    each other's cloud commits at exactly the boundaries the series
+    samples. Mutually exclusive with ``drain_tokens`` (a cross-cell
+    sequential coupling the sharded window model cannot honour)."""
+    sharded = mesh is not None or num_devices is not None
+    if sharded:
+        if drain_tokens is not None:
+            raise ValueError(
+                "drain_tokens couples every request to the previous one "
+                "fleet-wide; the mesh-sharded windows cannot honour it — "
+                "drop the mesh or use params.drain_rate time-based drain"
+            )
+        from repro.core import mesh_router
     b = int(reqs.model.shape[0])
     w = max(1, int(window_requests))
     n_windows = max(1, math.ceil(b / w))
@@ -123,9 +140,16 @@ def simulate(params: br.FleetParams, state: br.FleetState,
         dw = drain_tokens
         if dw is not None and np.ndim(dw) == 1:
             dw = dw[sl]
-        state, out = br.route_batch(params, state, win, dw, policy=policy,
-                                    actor=actor, chunk=chunk, unroll=unroll,
-                                    backend=backend)
+        if sharded:
+            state, out = mesh_router.route_batch_sharded(
+                params, state, win, mesh=mesh, num_devices=num_devices,
+                policy=policy, actor=actor, chunk=chunk, unroll=unroll,
+                backend=backend)
+        else:
+            state, out = br.route_batch(params, state, win, dw,
+                                        policy=policy, actor=actor,
+                                        chunk=chunk, unroll=unroll,
+                                        backend=backend)
         outs.append(out)
         q = np.asarray(state.queue_tokens)
         if cloud_index is not None:

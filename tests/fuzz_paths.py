@@ -1,0 +1,132 @@
+"""Shared fuzz driver: one random routing scenario, every router path.
+
+NOT a test module — ``tests/test_properties.py`` drives it through
+hypothesis (random scenarios) and ``tests/test_mesh_router.py`` through
+a fixed seed list (so the same invariant is exercised in environments
+without hypothesis installed, CI included).
+
+``check_router_paths_agree`` builds a random fleet + request stream
+from one seed and asserts the full path matrix agrees:
+
+* plain scan, chunked, speculative-chunked and mesh-sharded (D=1)
+  ``route_batch`` all produce identical decisions, residency, LRU
+  clocks and (to ulps, where re-association applies) latencies/queues;
+* for the policies the scalar ``ModelAwareRouter`` implements
+  ("greedy", "drain"), the scan's choices equal the oracle's.
+
+Fleets are drain-free and either cloud-free or single-cell-stream
+(cloud on): the configurations where the sharded window is bitwise
+(see ``core.mesh_router``). The sharded path is compared BITWISE
+against the scan — any drift is a real bug, not tolerance noise.
+"""
+import copy
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import batch_router as br
+from repro.core import mesh_router as mr
+from repro.core.catalog import build_catalog
+from repro.core.router import EdgeServer, ModelAwareRouter, Request
+
+CATALOG = build_catalog(
+    ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
+)
+_ORACLE_POLICIES = ("greedy", "drain")
+
+
+def _random_scenario(seed, n_cells, per_cell, cloud):
+    rng = np.random.default_rng(seed)
+    fleet = [
+        EdgeServer(
+            name=f"c{c}-es{i}",
+            flops_per_s=float(rng.uniform(5e13, 2e14)),
+            cache_slots=int(rng.integers(1, 3)),
+            uplink_bps=float(rng.uniform(5e7, 2e8)),
+            backhaul_bps=float(rng.uniform(5e8, 2e9)),
+            resident=list(rng.choice(len(CATALOG),
+                                     size=int(rng.integers(1, 3)),
+                                     replace=False)),
+            cell=c,
+        )
+        for c in range(n_cells)
+        for i in range(per_cell)
+    ]
+    if cloud:
+        from repro.launch.serve import make_cloud_server
+
+        fleet.append(make_cloud_server(CATALOG))
+    n = 60
+    # cloud on -> single-contributor stream (cell 0 only): the regime
+    # where the sharded window is bitwise even through the cloud column
+    req_cells = rng.integers(0, 1 if cloud else n_cells, n)
+    stream = (
+        rng.integers(0, len(CATALOG), n),
+        rng.uniform(1e5, 1e6, n),
+        rng.integers(1, 64, n),
+        req_cells,
+        np.cumsum(rng.exponential(2e-3, n)),
+    )
+    return fleet, stream
+
+
+def check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk):
+    fleet, (models, bits, toks, cells, arrivals) = _random_scenario(
+        seed, n_cells, per_cell, cloud
+    )
+    params, state0 = br.fleet_from_servers(fleet, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+        cell=jnp.asarray(cells, jnp.int32),
+        arrival_s=jnp.asarray(arrivals, jnp.float32),
+    )
+    st_scan, out_scan = br.route_batch(params, state0, reqs, policy=policy)
+    runs = {
+        "chunked": br.route_batch(params, state0, reqs, policy=policy,
+                                  chunk=chunk, speculative=False),
+        "speculative": br.route_batch(params, state0, reqs, policy=policy,
+                                      chunk=chunk, speculative=True),
+        "sharded": mr.route_batch_sharded(params, state0, reqs,
+                                          policy=policy, num_devices=1),
+        "sharded-chunked": mr.route_batch_sharded(params, state0, reqs,
+                                                  policy=policy, chunk=chunk,
+                                                  num_devices=1),
+    }
+    resident = np.asarray(st_scan.resident)
+    for name, (st, out) in runs.items():
+        np.testing.assert_array_equal(np.asarray(out.choice),
+                                      np.asarray(out_scan.choice),
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(out.hit),
+                                      np.asarray(out_scan.hit), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(st.resident), resident,
+                                      err_msg=name)
+        np.testing.assert_array_equal(
+            np.asarray(st.last_use)[resident],
+            np.asarray(st_scan.last_use)[resident], err_msg=name)
+        assert int(st.clock) == int(st_scan.clock), name
+        if name == "sharded":  # same inner path: bitwise, no tolerance
+            np.testing.assert_array_equal(np.asarray(out.latency),
+                                          np.asarray(out_scan.latency))
+            np.testing.assert_array_equal(np.asarray(st.queue_tokens),
+                                          np.asarray(st_scan.queue_tokens))
+        else:  # chunked commits re-associate the eq. 9 sums: ulps
+            np.testing.assert_allclose(np.asarray(out.latency),
+                                       np.asarray(out_scan.latency),
+                                       rtol=1e-5, err_msg=name)
+            np.testing.assert_allclose(np.asarray(st.queue_tokens),
+                                       np.asarray(st_scan.queue_tokens),
+                                       rtol=1e-5, err_msg=name)
+
+    if policy in _ORACLE_POLICIES:
+        router = ModelAwareRouter(copy.deepcopy(fleet), CATALOG,
+                                  policy=policy)
+        sc_choice = [
+            router.route(Request(int(m), float(b), int(t), cell=int(c),
+                                 arrival_s=float(a)))[0]
+            for m, b, t, c, a in zip(models, bits, toks, cells, arrivals)
+        ]
+        np.testing.assert_array_equal(np.asarray(out_scan.choice),
+                                      np.array(sc_choice))

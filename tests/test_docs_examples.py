@@ -16,6 +16,7 @@ REPO = Path(__file__).resolve().parents[1]
 README = (REPO / "README.md").read_text()
 SERVING = (REPO / "docs" / "serving.md").read_text()
 SCENARIOS = (REPO / "docs" / "scenarios.md").read_text()
+SHARDING = (REPO / "docs" / "sharding.md").read_text()
 EXAMPLES = sorted((REPO / "examples").glob("*.py"))
 
 
@@ -59,16 +60,17 @@ def _assert_commands_resolve(text, doc_name, needles):
                 assert (REPO / tok).is_file(), \
                     f"{doc_name} quotes missing {tok}"
     # quoted `python -m pkg.mod` modules must resolve to real files
-    for mod in re.findall(r"-m\s+([\w.]+)", joined):
-        if mod == "pytest":
-            continue
-        rel = Path(mod.replace(".", "/"))
-        hit = any(
-            (root / rel).with_suffix(".py").is_file()
-            or (root / rel / "__main__.py").is_file()
-            for root in (REPO, REPO / "src")
-        )
-        assert hit, f"{doc_name} quotes unresolvable module {mod}"
+    for cmd in cmds:
+        if "pytest" in cmd:
+            continue  # pytest's own -m takes a marker expression
+        for mod in re.findall(r"-m\s+([\w.]+)", cmd):
+            rel = Path(mod.replace(".", "/"))
+            hit = any(
+                (root / rel).with_suffix(".py").is_file()
+                or (root / rel / "__main__.py").is_file()
+                for root in (REPO, REPO / "src")
+            )
+            assert hit, f"{doc_name} quotes unresolvable module {mod}"
 
 
 def test_readme_quotes_real_commands():
@@ -133,6 +135,43 @@ def test_serving_md_python_snippets_compile():
                               block, re.M):
             assert importlib.util.find_spec(mod) is not None, \
                 f"serving.md snippet imports unresolvable {mod}"
+
+
+def test_sharding_md_quotes_real_commands():
+    """The sharding guide stays pinned like the others: quoted
+    scripts/modules must exist and it must keep covering the serve
+    mesh flag, the multidevice marker run and the fleet benchmark."""
+    _assert_commands_resolve(
+        SHARDING, "docs/sharding.md",
+        ("repro.launch.serve", "benchmarks.fleet_scale",
+         "--mesh", "-m multidevice",
+         "--only fleet_scale --smoke"),
+    )
+
+
+def test_sharding_md_python_snippets_compile():
+    blocks = re.findall(r"```python\n(.*?)```", SHARDING, re.S)
+    assert blocks, "sharding.md lost its python walkthrough"
+    for block in blocks:
+        compile(block, "sharding.md", "exec")
+        for mod in re.findall(r"^\s*(?:from|import)\s+(repro[\w.]*)",
+                              block, re.M):
+            assert importlib.util.find_spec(mod) is not None, \
+                f"sharding.md snippet imports unresolvable {mod}"
+
+
+def test_readme_links_sharding_guide():
+    assert "docs/sharding.md" in re.findall(r"\]\(([^)#`\s]+)\)", README), \
+        "README no longer links the sharding guide"
+
+
+def test_ci_covers_mesh_tier():
+    """The CI workflow keeps the forced-8-device mesh job: the
+    multidevice marker run and the fleet_scale smoke."""
+    ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    assert "--xla_force_host_platform_device_count=8" in ci
+    assert "-m multidevice" in ci
+    assert "--only fleet_scale --smoke" in ci
 
 
 def test_readme_links_serving_guide():

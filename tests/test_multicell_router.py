@@ -562,3 +562,255 @@ def test_empty_cell_rejection_heavy_chunked_matches_scan():
     assert s["completion_rate"] == pytest.approx(ok.mean())
     assert s["residency_hit_rate"] == pytest.approx(
         np.asarray(out_scan.hit)[ok].mean())
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded routing (core.mesh_router) — the multi-device matrix.
+#
+# Marked ``multidevice``: on a 1-device host conftest re-runs these once in
+# a forced-8-device child (see tests/conftest.py and docs/sharding.md).
+# Exactness tiers, pinned here exactly as the module docstring states them:
+#   * device-count invariance is ALWAYS bitwise (any fleet, any policy);
+#   * vs the plain single-device scan, bitwise whenever no cross-cell cloud
+#     feedback exists inside the window (cloud-free fleets, or streams
+#     where a single cell contributes all cloud traffic) and drain_rate=0;
+#   * with drain_rate > 0 the per-cell decay composition differs from the
+#     per-global-arrival one by ulps — choices/latencies agree, queues to
+#     a tolerance.
+# ---------------------------------------------------------------------------
+from repro.core import mesh_router as mr  # noqa: E402
+
+
+def _sharded_state_equal(st_a, st_b):
+    for f in ("resident", "queue_tokens"):
+        np.testing.assert_array_equal(np.asarray(getattr(st_a, f)),
+                                      np.asarray(getattr(st_b, f)), err_msg=f)
+    assert int(st_a.clock) == int(st_b.clock)
+    if st_a.time_s is not None:
+        np.testing.assert_array_equal(np.asarray(st_a.time_s),
+                                      np.asarray(st_b.time_s))
+    res = np.asarray(st_a.resident)
+    np.testing.assert_array_equal(np.asarray(st_a.last_use)[res],
+                                  np.asarray(st_b.last_use)[res])
+
+
+def _sharded_outcome_equal(out_a, out_b):
+    for f in br.RouteOutcome._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(out_a, f)),
+                                      np.asarray(getattr(out_b, f)), err_msg=f)
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("devices", [1, 2, 4, 8])
+@pytest.mark.parametrize("n_cells", [2, 4, 8])
+def test_sharded_bitwise_vs_plain_cloud_free(n_cells, devices):
+    """C x D matrix (non-dividing pairs included: 8 cells on 4 devices
+    packs 2 blocks/device, 2 cells on 8 leaves idle shards): cloud-free
+    drain-free fleets are bitwise vs the plain scan AND the oracle."""
+    rng = np.random.default_rng(100 + 10 * n_cells + devices)
+    fleet = _random_multicell_fleet(rng, n_cells, 3, drain_hi=0.0,
+                                    cloud=False)
+    models, bits, toks, cells, arrivals = _random_stream(rng, 200, n_cells)
+    params, state0 = br.fleet_from_servers(fleet, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+        cell=jnp.asarray(cells, jnp.int32),
+        arrival_s=jnp.asarray(arrivals, jnp.float32),
+    )
+    st_p, out_p = br.route_batch(params, state0, reqs)
+    st_s, out_s = mr.route_batch_sharded(params, state0, reqs,
+                                         num_devices=devices)
+    _sharded_outcome_equal(out_p, out_s)
+    _sharded_state_equal(st_p, st_s)
+    router, sc_choice, _ = _run_scalar(fleet, models, bits, toks, cells,
+                                       arrivals)
+    np.testing.assert_array_equal(np.asarray(out_s.choice), sc_choice)
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("n_cells,devices", [(3, 8), (5, 4), (6, 4)])
+def test_sharded_non_dividing_cell_device_counts(n_cells, devices):
+    """Cell counts that do not divide (or even reach) the device count
+    still route bitwise vs the plain scan."""
+    rng = np.random.default_rng(200 + n_cells)
+    fleet = _random_multicell_fleet(rng, n_cells, 2, drain_hi=0.0,
+                                    cloud=False)
+    models, bits, toks, cells, arrivals = _random_stream(rng, 150, n_cells)
+    params, state0 = br.fleet_from_servers(fleet, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+        cell=jnp.asarray(cells, jnp.int32),
+        arrival_s=jnp.asarray(arrivals, jnp.float32),
+    )
+    st_p, out_p = br.route_batch(params, state0, reqs)
+    st_s, out_s = mr.route_batch_sharded(params, state0, reqs,
+                                         num_devices=devices)
+    _sharded_outcome_equal(out_p, out_s)
+    _sharded_state_equal(st_p, st_s)
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("devices", [2, 8])
+def test_sharded_cloud_single_contributor_bitwise(devices):
+    """With a cloud column but ALL traffic from one cell, no cross-cell
+    cloud feedback exists — the sharded window is bitwise vs the plain
+    scan, cloud backlog and cloud LRU included."""
+    rng = np.random.default_rng(300 + devices)
+    fleet = _random_multicell_fleet(rng, 4, 2, drain_hi=0.0, cloud=True)
+    models, bits, toks, _, arrivals = _random_stream(rng, 150, 1)
+    cells = np.zeros(150, np.int64)
+    params, state0 = br.fleet_from_servers(fleet, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+        cell=jnp.asarray(cells, jnp.int32),
+        arrival_s=jnp.asarray(arrivals, jnp.float32),
+    )
+    st_p, out_p = br.route_batch(params, state0, reqs)
+    st_s, out_s = mr.route_batch_sharded(params, state0, reqs,
+                                         num_devices=devices)
+    # the fixture must actually exercise the shared cloud column
+    srv_cell = np.array([s.cell for s in fleet])
+    assert (srv_cell[np.asarray(out_s.choice)] == CLOUD_CELL).any()
+    _sharded_outcome_equal(out_p, out_s)
+    _sharded_state_equal(st_p, st_s)
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("chunk", [None, 64])
+@pytest.mark.parametrize("n_cells", [3, 8])
+def test_sharded_device_count_invariance(n_cells, chunk):
+    """THE sharded-router invariant: the device count is a pure execution
+    detail. Cloud on, drain on, all cells contributing — the hardest
+    configuration — must produce bit-identical choices, outcomes, queues,
+    residency and LRU clocks for D in {1, 2, 4, 8}."""
+    rng = np.random.default_rng(400 + n_cells + (0 if chunk is None else 1))
+    fleet = _random_multicell_fleet(rng, n_cells, 2, drain_hi=40.0,
+                                    cloud=True)
+    models, bits, toks, cells, arrivals = _random_stream(rng, 200, n_cells)
+    params, state0 = br.fleet_from_servers(fleet, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+        cell=jnp.asarray(cells, jnp.int32),
+        arrival_s=jnp.asarray(arrivals, jnp.float32),
+    )
+    st_1, out_1 = mr.route_batch_sharded(params, state0, reqs,
+                                         num_devices=1, chunk=chunk)
+    for d in (2, 4, 8):
+        st_d, out_d = mr.route_batch_sharded(params, state0, reqs,
+                                             num_devices=d, chunk=chunk)
+        _sharded_outcome_equal(out_1, out_d)
+        _sharded_state_equal(st_1, st_d)
+
+
+@pytest.mark.multidevice
+def test_sharded_rejections_and_orphan_cells():
+    """No cloud + out-of-range request cells: rejections (-1, inf, no
+    mutation) flow through the sharded path exactly like the plain scan
+    and the scalar oracle."""
+    rng = np.random.default_rng(500)
+    fleet = _random_multicell_fleet(rng, 3, 2, drain_hi=0.0, cloud=False)
+    models, bits, toks, cells, arrivals = _random_stream(rng, 150, 5)
+    assert (cells >= 3).any()
+    params, state0 = br.fleet_from_servers(fleet, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+        cell=jnp.asarray(cells, jnp.int32),
+        arrival_s=jnp.asarray(arrivals, jnp.float32),
+    )
+    st_p, out_p = br.route_batch(params, state0, reqs)
+    st_s, out_s = mr.route_batch_sharded(params, state0, reqs, num_devices=4)
+    router, sc_choice, _ = _run_scalar(fleet, models, bits, toks, cells,
+                                       arrivals)
+    assert (sc_choice == -1).any()
+    np.testing.assert_array_equal(np.asarray(out_s.choice), sc_choice)
+    _sharded_outcome_equal(out_p, out_s)
+    _sharded_state_equal(st_p, st_s)
+
+
+@pytest.mark.multidevice
+def test_sharded_drain_rate_close_to_plain():
+    """drain_rate > 0: each cell composes its queue decay over its OWN
+    arrival gaps while the plain scan decays at every global arrival —
+    same total elapsed time, but the clamp at zero fires at different
+    instants, so queues drift a fraction of a percent over a window.
+    Decisions and latencies agree; queues to a tolerance. (Bitwise
+    ACROSS device counts is pinned separately by
+    test_sharded_device_count_invariance.)"""
+    with enable_x64():
+        rng = np.random.default_rng(600)
+        fleet = _random_multicell_fleet(rng, 4, 3, drain_hi=40.0,
+                                        cloud=False)
+        models, bits, toks, cells, arrivals = _random_stream(rng, 250, 4)
+        params, state0 = br.fleet_from_servers(fleet, CATALOG)
+        reqs = br.RequestBatch(
+            model=jnp.asarray(models, jnp.int32),
+            prompt_bits=jnp.asarray(bits, jnp.float64),
+            gen_tokens=jnp.asarray(toks, jnp.float64),
+            cell=jnp.asarray(cells, jnp.int32),
+            arrival_s=jnp.asarray(arrivals, jnp.float64),
+        )
+        st_p, out_p = br.route_batch(params, state0, reqs)
+        st_s, out_s = mr.route_batch_sharded(params, state0, reqs,
+                                             num_devices=4)
+        np.testing.assert_array_equal(np.asarray(out_p.choice),
+                                      np.asarray(out_s.choice))
+        np.testing.assert_allclose(np.asarray(out_p.latency),
+                                   np.asarray(out_s.latency),
+                                   rtol=1e-12, atol=0.0)
+        np.testing.assert_array_equal(np.asarray(st_p.resident),
+                                      np.asarray(st_s.resident))
+        np.testing.assert_allclose(np.asarray(st_p.queue_tokens),
+                                   np.asarray(st_s.queue_tokens),
+                                   rtol=1e-2, atol=1e-6)
+
+
+@pytest.mark.multidevice
+def test_sharded_chunked_and_speculative_paths_agree():
+    """Inside each cell shard the scan/chunked/speculative inner paths
+    stay interchangeable on 4 devices: identical decisions, residency
+    and LRU clocks; latencies/queues to ulps (the chunked commit
+    re-associates the eq. 9 sums exactly like the unsharded chunked
+    path — see test_chunked_multicell_matches_scalar_oracle). The two
+    chunked variants (speculative on/off) ARE bitwise twins."""
+    rng = np.random.default_rng(700)
+    fleet = _random_multicell_fleet(rng, 4, 3, drain_hi=0.0, cloud=False)
+    models, bits, toks, cells, arrivals = _random_stream(rng, 200, 4)
+    params, state0 = br.fleet_from_servers(fleet, CATALOG)
+    reqs = br.RequestBatch(
+        model=jnp.asarray(models, jnp.int32),
+        prompt_bits=jnp.asarray(bits, jnp.float32),
+        gen_tokens=jnp.asarray(toks, jnp.float32),
+        cell=jnp.asarray(cells, jnp.int32),
+        arrival_s=jnp.asarray(arrivals, jnp.float32),
+    )
+    st_a, out_a = mr.route_batch_sharded(params, state0, reqs, num_devices=4)
+    st_b, out_b = mr.route_batch_sharded(params, state0, reqs, num_devices=4,
+                                         chunk=32, speculative=True)
+    st_c, out_c = mr.route_batch_sharded(params, state0, reqs, num_devices=4,
+                                         chunk=32, speculative=False)
+    for st, out in ((st_b, out_b), (st_c, out_c)):
+        np.testing.assert_array_equal(np.asarray(out_a.choice),
+                                      np.asarray(out.choice))
+        np.testing.assert_array_equal(np.asarray(out_a.hit),
+                                      np.asarray(out.hit))
+        np.testing.assert_allclose(np.asarray(out_a.latency),
+                                   np.asarray(out.latency), rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(st_a.resident),
+                                      np.asarray(st.resident))
+        res = np.asarray(st_a.resident)
+        np.testing.assert_array_equal(np.asarray(st_a.last_use)[res],
+                                      np.asarray(st.last_use)[res])
+        np.testing.assert_allclose(np.asarray(st_a.queue_tokens),
+                                   np.asarray(st.queue_tokens), rtol=1e-5)
+    _sharded_outcome_equal(out_b, out_c)
+    _sharded_state_equal(st_b, st_c)

@@ -90,6 +90,26 @@ def test_ssd_chunked_equals_recurrent(s, h, seed):
 
 
 @given(
+    seed=st.integers(0, 2**16),
+    n_cells=st.integers(1, 4),
+    per_cell=st.integers(1, 4),
+    cloud=st.booleans(),
+    policy=st.sampled_from(["greedy", "load", "drain"]),
+    chunk=st.sampled_from([16, 48]),
+)
+@settings(max_examples=8, deadline=None)
+def test_all_router_paths_agree(seed, n_cells, per_cell, cloud, policy,
+                                chunk):
+    """Random fleets/streams/policies: scan, chunked, speculative and
+    mesh-sharded ``route_batch`` agree with each other (sharded bitwise)
+    and with the scalar oracle. The same driver runs seed-pinned in
+    ``test_mesh_router.py`` for hypothesis-free environments."""
+    from fuzz_paths import check_router_paths_agree
+
+    check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk)
+
+
+@given(
     sq=st.sampled_from([64, 128]), win=st.sampled_from([0, 32]),
     seed=st.integers(0, 100),
 )
