@@ -1,0 +1,182 @@
+"""Degraded-service suite: the overload-economy scenarios end to end.
+
+Runs the degraded family of the scenario registry (``slo-mix``,
+``flash-crowd-outage``, ``drain-outage`` — ``docs/robustness.md``)
+through the long-horizon simulator on the SAME fleet template as
+``scenario_suite`` (6 catalogue models, 2 cells x 2 servers x 2 slots,
+no cloud, continuous drain), recording the honest cost of degradation:
+per-cause rejection rates (infeasible / admission / outage) next to the
+completion drop, plus the per-window queue series the admission control
+is supposed to bound.
+
+The headline acceptance check: under ``flash-crowd-outage`` (a 20x
+arrival spike while cell 0's servers are down) the SLO admission
+control must keep the peak edge queue p90 within ``QUEUE_BOUND_MULT``
+(5x) of the steady-state queue p90 — the same stream with the deadline
+column stripped is run as the no-SLO control to show the blow-up the
+SLO prevents.
+
+    PYTHONPATH=src python -m benchmarks.degraded_suite
+
+prints the CSV matrix (``name,us_per_call,derived``) and rewrites
+``benchmarks/BENCH_degraded.json``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.scenario_suite import (ARCHS, CACHE_SLOTS, CELLS, DRAIN_RATE,
+                                       SEED, SERVERS_PER_CELL, WINDOW,
+                                       _jsonable, _series_payload)
+from repro.core import batch_router as br
+from repro.core.catalog import build_catalog
+from repro.launch.serve import make_multicell_fleet
+from repro.workloads import compile_scenario, get_scenario, simulate
+from repro.workloads.simulate import mean_request_energy_j
+
+JSON_PATH = pathlib.Path(__file__).parent / "BENCH_degraded.json"
+SCENARIOS = ("slo-mix", "flash-crowd-outage", "drain-outage")
+POLICIES = ("greedy", "drain")
+#: acceptance bound: flash-crowd-outage peak queue p90 <= MULT x steady q90
+QUEUE_BOUND_MULT = 5.0
+
+
+def _fleet():
+    catalog = build_catalog(ARCHS)
+    fleet = make_multicell_fleet(CELLS, SERVERS_PER_CELL, catalog,
+                                 slots=CACHE_SLOTS, drain_rate=DRAIN_RATE,
+                                 cloud=False)
+    return br.fleet_from_servers(fleet, catalog)
+
+
+def _episode(params, state0, spec, pol):
+    """One (scenario, policy) cell: compile the stream, simulate with the
+    spec's fault schedule, return (reqs, outcome, series, wall_s)."""
+    reqs = compile_scenario(spec, seed=SEED, num_models=len(ARCHS),
+                            num_cells=CELLS)
+    # warmup pass so the timed one measures routing, not compilation
+    _, out, _ = simulate(params, state0, reqs, policy=pol,
+                         window_requests=WINDOW, faults=spec.faults)
+    jax.block_until_ready(out.choice)
+    t0 = time.perf_counter()
+    _, out, series = simulate(params, state0, reqs, policy=pol,
+                              window_requests=WINDOW, faults=spec.faults)
+    jax.block_until_ready(out.choice)
+    return reqs, out, series, time.perf_counter() - t0
+
+
+def smoke_check():
+    """Tiny end-to-end pass (no timing, no JSON): the flash-crowd-outage
+    episode must produce BOTH admission and outage rejections with the
+    four per-cause rates summing to 1 — the whole rejection channel
+    exercised through scenario -> FaultSpec -> simulate -> stats."""
+    params, state0 = _fleet()
+    spec = get_scenario("flash-crowd-outage", num_requests=768)
+    reqs = compile_scenario(spec, seed=SEED, num_models=len(ARCHS),
+                            num_cells=CELLS)
+    _, out, series = simulate(params, state0, reqs, policy="greedy",
+                              window_requests=WINDOW, faults=spec.faults)
+    cause = np.asarray(out.cause)
+    assert (cause == br.CAUSE_ADMISSION).any(), "no admission rejections"
+    assert (cause == br.CAUSE_OUTAGE).any(), "no outage rejections"
+    total = (series.completion_rate + series.infeasible_rate
+             + series.admission_rate + series.outage_rate)
+    assert np.allclose(total, 1.0), "per-cause rates must sum to 1"
+    n = cause.shape[0]
+    print(f"degraded_smoke_b{n},0.00,"
+          f"admission={int((cause == br.CAUSE_ADMISSION).sum())}"
+          f";outage={int((cause == br.CAUSE_OUTAGE).sum())}"
+          f";completed={int((cause == br.CAUSE_COMPLETED).sum())}")
+
+
+def main(scenarios=SCENARIOS, policies=POLICIES, emit_json=True,
+         header=True, smoke=False):
+    if smoke:
+        smoke_check()
+        return None
+    if header:
+        print("name,us_per_call,derived")
+    params, state0 = _fleet()
+
+    results = {}
+    for name in scenarios:
+        spec = get_scenario(name)
+        results[name] = {"spec": spec._asdict(), "policies": {}}
+        for pol in policies:
+            reqs, out, series, wall = _episode(params, state0, spec, pol)
+            n = int(reqs.model.shape[0])
+            s = br.stats(out)
+            s["mean_energy_j"] = mean_request_energy_j(params, reqs, out)
+            s["queue_p90_peak"] = float(series.queue_p90.max())
+            s["route_s"] = round(wall, 4)
+            results[name]["policies"][pol] = {
+                "aggregate": {k: _jsonable(v) for k, v in s.items()},
+                "series": _series_payload(series),
+            }
+            print(
+                f"degraded_{name}_{pol}_b{n},"
+                f"{wall / n * 1e6:.2f},"
+                f"completion={s['completion_rate']:.3f}"
+                f";admission={s.get('admission_rate', 0.0):.3f}"
+                f";outage={s.get('outage_rate', 0.0):.3f}"
+                f";infeasible={s.get('infeasible_rate', 0.0):.3f}"
+                f";queue_p90_peak={s['queue_p90_peak']:.0f}"
+            )
+
+    # --- the acceptance check: SLO admission as the queue's relief valve
+    acceptance = None
+    if "flash-crowd-outage" in scenarios:
+        pol = policies[0]
+        steady = get_scenario("steady")
+        _, _, st_series, _ = _episode(params, state0, steady, pol)
+        steady_q90 = float(st_series.queue_p90[-1])
+        bound = QUEUE_BOUND_MULT * steady_q90
+        slo_peak = float(results["flash-crowd-outage"]["policies"][pol]
+                         ["aggregate"]["queue_p90_peak"])
+        # control: the same spike + outage with the deadline column
+        # stripped — what the queue does when nothing says no
+        control = get_scenario("flash-crowd-outage")._replace(
+            deadline_mix=())
+        _, _, ctl_series, _ = _episode(params, state0, control, pol)
+        control_peak = float(ctl_series.queue_p90.max())
+        acceptance = {
+            "policy": pol,
+            "steady_queue_p90": _jsonable(steady_q90),
+            "bound_mult": QUEUE_BOUND_MULT,
+            "bound": _jsonable(bound),
+            "slo_queue_p90_peak": _jsonable(slo_peak),
+            "control_queue_p90_peak": _jsonable(control_peak),
+            "bounded": bool(slo_peak <= bound),
+        }
+        print(f"# queue bound [{pol}]: steady_q90={steady_q90:.0f} "
+              f"bound={bound:.0f} slo_peak={slo_peak:.0f} "
+              f"control_peak={control_peak:.0f} "
+              f"{'OK' if slo_peak <= bound else 'VIOLATED'}")
+
+    if emit_json:
+        payload = {
+            "shape": {
+                "archs": ARCHS, "cells": CELLS,
+                "servers_per_cell": SERVERS_PER_CELL,
+                "cache_slots": CACHE_SLOTS, "cloud": False,
+                "drain_rate": DRAIN_RATE, "window_requests": WINDOW,
+                "seed": SEED,
+            },
+            "scenarios": results,
+            "acceptance": acceptance,
+        }
+        JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {JSON_PATH.name}: "
+              + " ".join(
+                  f"{k}={v['policies'][policies[0]]['aggregate']['completion_rate']:.3f}"
+                  for k, v in results.items()))
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -167,6 +167,17 @@ def bench_scenarios():
     scenario_suite.main(header=False)
 
 
+def bench_degraded(smoke=False):
+    """Degraded-service scenarios (slo-mix / flash-crowd-outage /
+    drain-outage) with per-cause rejection rates + the SLO queue-bound
+    acceptance check; refreshes benchmarks/BENCH_degraded.json. With
+    --smoke, one tiny episode asserting admission AND outage rejections
+    end to end (no timing, no JSON)."""
+    from benchmarks import degraded_suite
+
+    degraded_suite.main(header=False, smoke=smoke)
+
+
 def bench_train_step():
     from repro.configs import get_arch, reduced
     from repro.data import pipeline
@@ -238,6 +249,7 @@ SECTIONS = [
     ("fleet_scale", bench_fleet_scale),
     ("policy_serving", bench_policy_serving),
     ("scenarios", bench_scenarios),
+    ("degraded_suite", bench_degraded),
     ("train_step", bench_train_step),
     ("paper_tables", paper_tables),
     ("faithful", faithful_table),

@@ -83,7 +83,15 @@ def main(scenarios=None, policies=POLICIES, emit_json=True, header=True):
                                  slots=CACHE_SLOTS, drain_rate=DRAIN_RATE,
                                  cloud=False)
     params, state0 = br.fleet_from_servers(fleet, catalog)
-    scenarios = list(scenarios or list_scenarios())
+    # default to the fault-free core family: the degraded-service
+    # scenarios carry SLO/fault schedules that only mean something under
+    # benchmarks/degraded_suite.py, which passes them to the simulator
+    scenarios = list(scenarios or [
+        n for n in list_scenarios()
+        if not (get_scenario(n).deadline_mix
+                or get_scenario(n).faults.outages
+                or get_scenario(n).faults.drain_outages)
+    ])
 
     results = {}
     for name in scenarios:

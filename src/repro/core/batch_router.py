@@ -161,7 +161,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import costs
-from repro.core.router import CLOUD_CELL
+from repro.core.router import (
+    CAUSE_ADMISSION, CAUSE_COMPLETED, CAUSE_INFEASIBLE, CAUSE_OUTAGE,
+    CLOUD_CELL,
+)
 from repro.kernels import ops
 
 _NEVER_USED = -(2**30)  # last-use clock for models that are not resident
@@ -192,6 +195,11 @@ class FleetParams(NamedTuple):
     decode_flops_per_token: jnp.ndarray  # (K,)
     cell: Optional[jnp.ndarray] = None        # (N,) int32 cell id; CLOUD_CELL
     drain_rate: Optional[jnp.ndarray] = None  # (N,) tokens/sec drained
+    #: (C, C) bool neighbour-cell adjacency: ``spill[rc, sc]`` makes cell
+    #: ``sc``'s servers visible to cell ``rc``'s requests at a backhaul
+    #: surcharge (``prompt_bits / backhaul_bps`` — the prompt crosses the
+    #: inter-cell link). ``None`` compiles the spill column out.
+    spill: Optional[jnp.ndarray] = None
 
 
 class FleetState(NamedTuple):
@@ -217,21 +225,33 @@ class RequestBatch(NamedTuple):
     gen_tokens: jnp.ndarray   # (B,)
     cell: Optional[jnp.ndarray] = None       # (B,) int32 requesting cell
     arrival_s: Optional[jnp.ndarray] = None  # (B,) wall-clock arrivals
+    #: (B,) per-request SLO deadline in seconds. A request whose BEST
+    #: eq. 11 score exceeds its deadline is rejected (admission control);
+    #: ``+inf`` entries have no SLO, ``None`` compiles the check out.
+    deadline_s: Optional[jnp.ndarray] = None
 
 
 class RouteOutcome(NamedTuple):
     choice: jnp.ndarray     # (B,) int32 chosen server; -1 == rejected
     latency: jnp.ndarray    # (B,) predicted eq. 11 latency at choice
     hit: jnp.ndarray        # (B,) bool — model resident at decision time
+    #: (B,) int32 rejection cause: CAUSE_COMPLETED (0) for routed
+    #: requests, else CAUSE_INFEASIBLE / CAUSE_ADMISSION / CAUSE_OUTAGE
+    #: (see ``rejection_cause``). ``None`` only on hand-built outcomes.
+    cause: Optional[jnp.ndarray] = None
 
 
 # ---------------------------------------------------------------------------
 # fleet construction
 # ---------------------------------------------------------------------------
-def make_fleet_params(servers, catalog) -> FleetParams:
-    """Build array fleet params from ``EdgeServer``s + ``CatalogEntry``s."""
+def make_fleet_params(servers, catalog, spill=None) -> FleetParams:
+    """Build array fleet params from ``EdgeServer``s + ``CatalogEntry``s.
+
+    ``spill`` — an optional (C, C) bool neighbour-cell adjacency — lands
+    verbatim in ``FleetParams.spill`` (see the field doc)."""
     entries = sorted(catalog, key=lambda e: e.index)
     return FleetParams(
+        spill=None if spill is None else jnp.asarray(np.asarray(spill, bool)),
         flops_per_s=jnp.asarray(np.array([s.flops_per_s for s in servers])),
         uplink_bps=jnp.asarray(np.array([s.uplink_bps for s in servers])),
         backhaul_bps=jnp.asarray(np.array([s.backhaul_bps for s in servers])),
@@ -278,17 +298,19 @@ def make_fleet_state(servers, num_models: int, clock: int = 0,
     )
 
 
-def fleet_from_servers(servers, catalog, clock: int = 0, time_s: float = 0.0):
+def fleet_from_servers(servers, catalog, clock: int = 0, time_s: float = 0.0,
+                       spill=None):
     """(FleetParams, FleetState) snapshot of a scalar router's fleet.
 
     ``clock`` must be the scalar router's current clock when snapshotting
     mid-stream (its ``last_use`` values are in [1, clock]; starting the
     batched clock below them would invert LRU order). Fresh fleets use 0.
     ``time_s`` likewise carries the oracle's wall clock (``router.time_s``)
-    so the time-based drain resumes from the same instant.
+    so the time-based drain resumes from the same instant. ``spill``
+    mirrors the oracle's neighbour-cell adjacency.
     """
     return (
-        make_fleet_params(servers, catalog),
+        make_fleet_params(servers, catalog, spill=spill),
         make_fleet_state(servers, len(catalog), clock=clock, time_s=time_s),
     )
 
@@ -383,7 +405,8 @@ def permute_fleet(params: FleetParams, state: FleetState, order):
     """Apply a server permutation to every per-server axis of
     ``(params, state)`` — e.g. ``cell_major_order(params.cell)`` to bring
     an arbitrary fleet into the blocked layout. Choices reported against
-    the permuted fleet map back through ``order[choice]``."""
+    the permuted fleet map back through ``order[choice]``. Per-CELL
+    arrays (``spill``) ride through unchanged: cell ids are preserved."""
     order = jnp.asarray(np.asarray(order), jnp.int32)
     new_params = params._replace(
         flops_per_s=params.flops_per_s[order],
@@ -430,6 +453,10 @@ def local_block_params(params: FleetParams, layout: CellLayout,
         cell=local_cell,
         drain_rate=(None if params.drain_rate is None
                     else take(params.drain_rate)),
+        # the local view relabels cells to {0, CLOUD_CELL}: the global
+        # adjacency is meaningless here (spill fleets take the
+        # full-replication sharded path instead)
+        spill=None,
     )
 
 
@@ -450,18 +477,37 @@ def _static_costs(params: FleetParams, reqs: RequestBatch):
     return t_trans, switch_price, flops_tok
 
 
+def _spill_adjacency(params: FleetParams, reqs: RequestBatch):
+    """(B, N) bool: server reachable through the neighbour-cell spill
+    adjacency (``None`` when the fleet carries no ``spill``). May overlap
+    the home cell when the adjacency has a true diagonal — callers that
+    price the surcharge must exclude home pairs. Out-of-range cells on
+    either side (orphan requests, ``CLOUD_CELL`` servers) never spill."""
+    if params.spill is None or params.cell is None or reqs.cell is None:
+        return None
+    nc = params.spill.shape[0]
+    rc, sc = reqs.cell, params.cell
+    rok = (rc >= 0) & (rc < nc)
+    sok = (sc >= 0) & (sc < nc)
+    adj = params.spill[jnp.clip(rc, 0, nc - 1)][:, jnp.clip(sc, 0, nc - 1)]
+    return adj & rok[:, None] & sok[None, :]
+
+
 def cell_mask(params: FleetParams, reqs: RequestBatch):
     """(B, N) block-diagonal visibility mask, or ``None`` when untopologied.
 
     True where the server is in the request's cell OR in the reserved
-    ``CLOUD_CELL`` (the fleet-wide cloud-fallback column). ``None`` —
-    returned when either side carries no cell ids — means "everything
+    ``CLOUD_CELL`` (the fleet-wide cloud-fallback column) OR reachable
+    through the ``FleetParams.spill`` neighbour-cell adjacency. ``None``
+    — returned when either side carries no cell ids — means "everything
     visible" and lets callers compile the mask away statically."""
     if params.cell is None or reqs.cell is None:
         return None
-    return (params.cell[None, :] == reqs.cell[:, None]) | (
+    visible = (params.cell[None, :] == reqs.cell[:, None]) | (
         params.cell[None, :] == CLOUD_CELL
     )
+    adj = _spill_adjacency(params, reqs)
+    return visible if adj is None else visible | adj
 
 
 def score_matrix(params: FleetParams, state: FleetState, reqs: RequestBatch,
@@ -490,8 +536,47 @@ def score_matrix(params: FleetParams, state: FleetState, reqs: RequestBatch,
         model=reqs.model,
         req_cell=reqs.cell if has_cells else None,
         srv_cell=params.cell if has_cells else None,
+        spill=params.spill if has_cells else None,
         cloud_cell=CLOUD_CELL, backend=backend,
     )
+
+
+def rejection_cause(params: FleetParams, reqs: RequestBatch, outage,
+                    choice) -> jnp.ndarray:
+    """(B,) int32 cause codes for a routed batch, derived POST-HOC.
+
+    Whether a rejection was *structural* never depends on the fleet
+    state — only on visibility (cells + spill + cloud) and the outage
+    mask — so the channel is a pure function of the routed choices:
+
+    * ``CAUSE_COMPLETED`` (0)  — ``choice >= 0``;
+    * ``CAUSE_ADMISSION`` (2)  — some visible server was up, so a finite
+      eq. 11 score existed: the request was refused because its best
+      score exceeded ``deadline_s`` (SLO admission control);
+    * ``CAUSE_OUTAGE``   (3)  — servers were visible but every one of
+      them was outaged;
+    * ``CAUSE_INFEASIBLE`` (1) — no server was visible at all (empty
+      cell with no cloud column).
+
+    Every router path shares this helper, so the per-cause rates in
+    ``stats``/``window_stats`` agree bitwise across scan / chunked /
+    speculative / sharded."""
+    b = reqs.model.shape[0]
+    completed = choice >= 0
+    vis = cell_mask(params, reqs)
+    if vis is None:
+        any_vis = jnp.ones((b,), bool)
+        any_up = (any_vis if outage is None
+                  else jnp.broadcast_to(jnp.any(~outage), (b,)))
+    else:
+        any_vis = vis.any(axis=1)
+        any_up = (any_vis if outage is None
+                  else (vis & ~outage[None, :]).any(axis=1))
+    rejected = jnp.where(
+        any_up, CAUSE_ADMISSION,
+        jnp.where(any_vis, CAUSE_OUTAGE, CAUSE_INFEASIBLE),
+    )
+    return jnp.where(completed, CAUSE_COMPLETED, rejected).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -647,6 +732,7 @@ def route_batch(
     unroll: int = 8,
     backend: Optional[str] = None,
     speculative: bool = True,
+    outage=None,
 ):
     """Route a whole request batch in one jitted call; returns
     ``(state, outcome)``.
@@ -666,6 +752,20 @@ def route_batch(
         ``drain_rate * dt`` where ``dt`` is the wall-clock gap since the
         carry clock ``state.time_s`` last advanced.
 
+    Robustness knobs (likewise compiled out when absent; see
+    ``docs/robustness.md``):
+      * ``reqs.deadline_s`` — SLO admission control: a request whose
+        BEST eq. 11 score exceeds its deadline is rejected without
+        committing (``+inf`` deadlines have no SLO).
+      * ``params.spill`` — neighbour-cell spill: adjacent cells become
+        visible at a backhaul surcharge, so overload spills to
+        neighbours before the cloud column.
+      * ``outage`` — (N,) bool fault mask: an outaged server's column
+        scores ``+inf`` and its queue freezes (no drain) for this call.
+
+    ``outcome.cause`` labels every rejection (``rejection_cause``), so
+    ``stats``/``window_stats`` can report honest per-cause rates.
+
     Performance knobs (all static — each combination compiles once):
       * ``chunk`` — two-phase commit: score ``chunk`` requests per fused
         kernel call, then run the slimmed correction scan (see module
@@ -684,25 +784,26 @@ def route_batch(
         ``False`` forces the plain correction scan (the A/B baseline).
     """
     backend = resolve_backend(backend)  # env read stays outside the jit cache
-    return _route_batch(params, state, reqs, drain_tokens, policy=policy,
-                        actor=actor, chunk=chunk, unroll=unroll,
-                        backend=backend, speculative=speculative)
+    return _route_batch(params, state, reqs, drain_tokens, outage,
+                        policy=policy, actor=actor, chunk=chunk,
+                        unroll=unroll, backend=backend,
+                        speculative=speculative)
 
 
 @functools.partial(
     jax.jit, static_argnames=("policy", "actor", "chunk", "unroll", "backend",
                               "speculative")
 )
-def _route_batch(params, state, reqs, drain_tokens, *, policy, actor, chunk,
-                 unroll, backend, speculative=True):
+def _route_batch(params, state, reqs, drain_tokens, outage, *, policy, actor,
+                 chunk, unroll, backend, speculative=True):
     policy_fn = _resolve_policy(policy, actor)
     return _route_core(params, state, reqs, drain_tokens, policy_fn,
                        chunk=chunk, unroll=unroll, backend=backend,
-                       speculative=speculative)
+                       speculative=speculative, outage=outage)
 
 
 def _route_core(params, state, reqs, drain_tokens, policy_fn, *, chunk,
-                unroll, backend, speculative=True):
+                unroll, backend, speculative=True, outage=None):
     """The traceable body of :func:`route_batch` with the policy already
     resolved to a callable — ``core.mesh_router`` vmaps exactly this over
     cell blocks, so it must stay jit-free and policy-static."""
@@ -717,8 +818,15 @@ def _route_core(params, state, reqs, drain_tokens, policy_fn, *, chunk,
     )
     has_cells = params.cell is not None and reqs.cell is not None
     has_time = params.drain_rate is not None and reqs.arrival_s is not None
+    if outage is not None:
+        outage = jnp.asarray(outage, bool)
     drain_rate = params.drain_rate.astype(dtype) if has_time else None
+    if drain_rate is not None and outage is not None:
+        # frozen queue: an outaged server stops draining for this call
+        drain_rate = jnp.where(outage, 0.0, drain_rate)
     arrivals = reqs.arrival_s.astype(dtype) if has_time else None
+    deadline = (reqs.deadline_s.astype(dtype)
+                if reqs.deadline_s is not None else None)
     time0 = state.time_s if state.time_s is not None else 0.0
     carry = (state.resident, state.last_use,
              state.queue_tokens.astype(dtype), state.clock,
@@ -727,26 +835,50 @@ def _route_core(params, state, reqs, drain_tokens, policy_fn, *, chunk,
     if chunk is None:
         carry, outs = _scan_full(params, reqs, carry, policy_fn, dtype,
                                  gen_tokens, drain, drain_rate, arrivals,
-                                 has_cells, has_time, unroll)
+                                 deadline, outage, has_cells, has_time,
+                                 unroll)
     else:
         carry, outs = _scan_chunked(params, reqs, carry, policy_fn, dtype,
                                     gen_tokens, drain, drain_rate, arrivals,
-                                    has_cells, has_time, chunk, unroll,
-                                    backend, speculative)
+                                    deadline, outage, has_cells, has_time,
+                                    chunk, unroll, backend, speculative)
     resident, last_use, queue, clock, time_s = carry
     choice, latency, hit = outs
     new_state = FleetState(
         resident=resident, last_use=last_use, queue_tokens=queue, clock=clock,
         time_s=time_s,
     )
-    return new_state, RouteOutcome(choice=choice, latency=latency, hit=hit)
+    return new_state, RouteOutcome(
+        choice=choice, latency=latency, hit=hit,
+        cause=rejection_cause(params, reqs, outage, choice),
+    )
 
 
 def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
-               drain_rate, arrivals, has_cells, has_time, unroll):
+               drain_rate, arrivals, deadline, outage, has_cells, has_time,
+               unroll):
     """Single-scan path: full eq. 11 re-derivation per step (bit-exact
-    latencies vs the scalar oracle — same term order, same rounding)."""
+    latencies vs the scalar oracle — same term order, same rounding).
+
+    Visibility (cells + spill), the spill surcharge and the outage mask
+    are all state-independent, so they fold into the precomputed
+    ``t_trans`` panel — masked pairs carry ``+inf`` and the scan body
+    stays a pure add chain. The surcharge lands ON the eq. 5 term
+    before the eq. 7/9 adds, matching the oracle's term order bitwise."""
     t_trans, switch_price, flops_tok = _static_costs(params, reqs)
+    if has_cells and params.spill is not None:
+        adj = _spill_adjacency(params, reqs)
+        spilled = adj & (params.cell[None, :] != reqs.cell[:, None])
+        t_trans = t_trans + jnp.where(
+            spilled,
+            reqs.prompt_bits[:, None] / params.backhaul_bps[None, :], 0.0,
+        )
+    vis = cell_mask(params, reqs)
+    if vis is not None:
+        t_trans = jnp.where(vis, t_trans, jnp.inf)
+    if outage is not None:
+        t_trans = jnp.where(outage[None, :], jnp.inf, t_trans)
+    has_mask = vis is not None or outage is not None
     work = gen_tokens * flops_tok                               # (B,)
     needs_ctx = getattr(policy_fn, "needs_ctx", False)
     prompt = reqs.prompt_bits if needs_ctx else None
@@ -758,7 +890,7 @@ def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     def step(carry, xs):
         resident, last_use, queue, clock, time_s = carry
         (model, t_trans_b, switch_b, flops_tok_b, work_b, drain_b, gen_b,
-         cell_b, arrival_b, prompt_b) = xs
+         cell_b, arrival_b, prompt_b, dl_b) = xs
 
         if has_time:  # wall-clock queue decay since the last arrival
             dt = jnp.maximum(arrival_b - time_s, 0.0)
@@ -771,10 +903,8 @@ def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
         t_comp = (queue * flops_tok_b + work_b) / params.flops_per_s
         lats = t_trans_b + t_switch + t_comp                    # eq. 11
         queue_vis = queue
-        if has_cells:  # out-of-cell servers can never win the argmin
-            visible = (params.cell == cell_b) | (params.cell == CLOUD_CELL)
-            lats = jnp.where(visible, lats, jnp.inf)
-            queue_vis = jnp.where(visible, queue, jnp.inf)
+        if has_mask:  # masked servers can never win the argmin
+            queue_vis = jnp.where(jnp.isfinite(t_trans_b), queue, jnp.inf)
 
         if getattr(policy_fn, "needs_obs", True):
             # scalar _observe layout: [resident, queue, flops] per server
@@ -801,24 +931,32 @@ def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             # out-of-range choice: fall back to the masked greedy argmin.
             safe = jnp.clip(choice, 0, lats.shape[0] - 1)
             choice_ok = choice == safe
-            if has_cells:
-                choice_ok &= visible[safe]
+            if has_mask:
+                choice_ok &= jnp.isfinite(t_trans_b[safe])
             choice = jnp.where(choice_ok, safe,
                                jnp.argmin(lats).astype(jnp.int32))
 
-        # a cell with no members and no cloud column leaves every
-        # candidate at inf: reject (choice -1) without committing
-        ok = jnp.isfinite(lats[choice]) if has_cells else None
+        # a cell with no members and no cloud column (or fully outaged)
+        # leaves every candidate at inf: reject without committing; the
+        # SLO check compares the BEST score — policy-independent, so an
+        # admission rejection never depends on which server was picked
+        ok = jnp.isfinite(lats[choice]) if has_mask else None
+        if dl_b is not None:
+            admit = jnp.min(lats) <= dl_b
+            ok = admit if ok is None else ok & admit
         resident, last_use, queue, out = _commit(
             params, resident, last_use, queue, clock, model, gen_b, choice,
             lats, ok,
         )
         if drain_b is not None:  # None is static: compiled out of the scan
-            queue = jnp.maximum(queue - drain_b, 0.0)
+            d = (drain_b if outage is None
+                 else jnp.where(outage, 0.0, drain_b))
+            queue = jnp.maximum(queue - d, 0.0)
         return (resident, last_use, queue, clock, time_s), out
 
     xs = (reqs.model, t_trans, switch_price, flops_tok, work, drain,
-          gen_tokens, reqs.cell if has_cells else None, arrivals, prompt)
+          gen_tokens, reqs.cell if has_cells else None, arrivals, prompt,
+          deadline)
     return jax.lax.scan(step, carry, xs, unroll=unroll)
 
 
@@ -847,8 +985,8 @@ def _static_argmin(col, k):
 
 
 def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
-                  drain_rate, arrivals, has_cells, has_time, chunk, unroll,
-                  backend, speculative=True):
+                  drain_rate, arrivals, deadline, outage, has_cells, has_time,
+                  chunk, unroll, backend, speculative=True):
     """Two-phase commit: fused chunk scoring + slimmed correction scan,
     with the speculative parallel commit on top for the greedy policy
     (``speculative=True``; see the module docstring for the argument).
@@ -894,8 +1032,13 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     cells = pad1(reqs.cell) if has_cells else None
     arrs = pad1(arrivals) if has_time else None
     drains = pad1(drain) if drain is not None else None
+    # padded deadline lanes are 0.0 — harmless, `valid` already rejects
+    dls = pad1(deadline) if deadline is not None else None
     # padded tail requests are inert: no commit, no clock/time advance
     valid = (jnp.arange(n_chunks * c) < b) if pad else None
+    # visibility rides in `base` as +inf; the outage mask folds into the
+    # same channel, so every downstream finiteness check covers both
+    has_mask = has_cells or outage is not None
     needs_obs = getattr(policy_fn, "needs_obs", True)
     needs_ctx = getattr(policy_fn, "needs_ctx", False)
     # the builtin argmins can only land on an invisible server when the
@@ -957,8 +1100,8 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
 
     def step(carry, xs):
         lru, queue, clock, time_s = carry
-        model_b, scal_b, drain_b, arrival_b, valid_b, base_b, prompt_b, \
-            cell_b, aux_b = xs
+        model_b, scal_b, drain_b, arrival_b, valid_b, dl_b, base_b, \
+            prompt_b, cell_b, aux_b = xs
         gen_b, size_b, ftok_b = scal_b[0], scal_b[1], scal_b[2]
 
         if has_time:  # wall-clock residue: queue decay since last arrival
@@ -994,9 +1137,9 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
         else:
             obs = None
         queue_vis = queue
-        if has_cells:
-            # visibility is already folded into base as +inf; XLA DCEs
-            # this for policies that never read the queue (greedy)
+        if has_mask:
+            # visibility/outage is already folded into base as +inf; XLA
+            # DCEs this for policies that never read the queue (greedy)
             queue_vis = jnp.where(jnp.isfinite(base_b), queue, jnp.inf)
         if needs_ctx:
             ctx = PolicyCtx(
@@ -1027,13 +1170,16 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             # out-of-range choice: fall back to the masked greedy argmin.
             safe = jnp.clip(choice, 0, n - 1)
             choice_ok = choice == safe
-            if has_cells:
+            if has_mask:
                 choice_ok &= jnp.isfinite(base_b[safe])
             choice = jnp.where(choice_ok, safe,
                                jnp.argmin(lats).astype(jnp.int32))
 
         lat_b = lats[choice]
-        ok = jnp.isfinite(lat_b) if has_cells else None
+        ok = jnp.isfinite(lat_b) if has_mask else None
+        if dl_b is not None:  # SLO admission: best score vs deadline
+            admit = jnp.min(lats) <= dl_b
+            ok = admit if ok is None else ok & admit
         if valid_b is not None:
             ok = valid_b if ok is None else ok & valid_b
 
@@ -1049,27 +1195,34 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
         if drain_b is not None:
             d = drain_b if valid_b is None else jnp.where(valid_b, drain_b,
                                                           0.0)
+            if outage is not None:  # frozen queue on outaged servers
+                d = jnp.where(outage, 0.0, d)
             queue = jnp.maximum(queue - d, 0.0)
         return (lru, queue, clock, time_s), out
 
     def chunk_step(carry, xs):
         model_c, scal_c, prompt_c, work_c, drain_c, cell_c, arr_c, \
-            valid_c = xs
+            valid_c, dl_c = xs
         # phase 1 — ONE fused kernel call scores the whole chunk: the
         # switch-free base (eq. 5 + zero-backlog eq. 9) with the cell
-        # mask folded in as +inf. Everything here is state-independent;
-        # the switch price stays OUT of the base because re-subtracting
-        # it on residency would cancel catastrophically (the download
-        # price dwarfs the served latencies) — the scan re-gates it.
+        # mask (incl. spill surcharge) folded in as +inf. Everything
+        # here is state-independent; the switch price stays OUT of the
+        # base because re-subtracting it on residency would cancel
+        # catastrophically (the download price dwarfs the served
+        # latencies) — the scan re-gates it.
         base = ops.route_score(
             prompt_c, None, scal_c[:, 2], work_c,
             params.uplink_bps, params.backhaul_bps, params.flops_per_s,
             req_cell=cell_c,
             srv_cell=params.cell if has_cells else None,
+            spill=params.spill if has_cells else None,
             cloud_cell=CLOUD_CELL, backend=backend,
         )                                                       # (c, N)
+        if outage is not None:
+            base = jnp.where(outage[None, :], jnp.inf, base)
+
         def inner_xs(aux):
-            return (model_c, scal_c, drain_c, arr_c, valid_c, base,
+            return (model_c, scal_c, drain_c, arr_c, valid_c, dl_c, base,
                     prompt_c if needs_ctx else None,
                     cell_c if needs_ctx and has_cells else None, aux)
 
@@ -1108,7 +1261,7 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     def spec_chunk_step(carry, xs):
         lru, queue, clock, time_s = carry
         model_c, scal_c, prompt_c, work_c, drain_c, cell_c, arr_c, \
-            valid_c = xs
+            valid_c, dl_c = xs
         gen_c, size_c, ftok_c = scal_c[:, 0], scal_c[:, 1], scal_c[:, 2]
         idx_c = jnp.arange(c, dtype=jnp.int32)
 
@@ -1118,8 +1271,11 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             params.uplink_bps, params.backhaul_bps, params.flops_per_s,
             req_cell=cell_c,
             srv_cell=params.cell if has_cells else None,
+            spill=params.spill if has_cells else None,
             cloud_cell=CLOUD_CELL, backend=backend,
         )                                                    # (c, N)
+        if outage is not None:
+            base = jnp.where(outage[None, :], jnp.inf, base)
         # ... plus the eq. 7 switch gate priced against the CHUNK-ENTRY
         # residency, applied with the per-step expression verbatim: the
         # speculative scores stay bitwise equal to the correction
@@ -1131,7 +1287,7 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
 
         def spec_step(carry, xs_b):
             queue, time_s = carry
-            basez_b, ftok_b, gen_b, drain_b, arrival_b, valid_b = xs_b
+            basez_b, ftok_b, gen_b, drain_b, arrival_b, valid_b, dl_b = xs_b
             if has_time:
                 dt = jnp.maximum(arrival_b - time_s, 0.0)
                 if valid_b is not None:
@@ -1149,19 +1305,24 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             lats = basez_b + (queue * ftok_b) / params.flops_per_s
             choice = jnp.argmin(lats).astype(jnp.int32)
             touch_n = iota_n == choice
-            if has_cells:
+            if has_mask:
                 touch_n &= jnp.isfinite(basez_b[choice])
+            if dl_b is not None:
+                # greedy: lats[choice] IS the best score — the SLO check
+                touch_n &= lats[choice] <= dl_b
             if valid_b is not None:
                 touch_n &= valid_b
             queue = queue + jnp.where(touch_n, gen_b, 0.0)
             if drain_b is not None:
                 d = drain_b if valid_b is None else jnp.where(valid_b,
                                                               drain_b, 0.0)
+                if outage is not None:
+                    d = jnp.where(outage, 0.0, d)
                 queue = jnp.maximum(queue - d, 0.0)
             out = (choice, queue) + ((time_s,) if has_time else ())
             return (queue, time_s), out
 
-        inner = (basez, ftok_c, gen_c, drain_c, arr_c, valid_c)
+        inner = (basez, ftok_c, gen_c, drain_c, arr_c, valid_c, dl_c)
         _, souts = jax.lax.scan(spec_step, (queue, time_s), inner,
                                 unroll=min(unroll, c))
         choices = souts[0]
@@ -1183,7 +1344,9 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
         col = choices[:, None]
         lat = jnp.take_along_axis(lats_full, col, axis=1)[:, 0]
         hits = jnp.take_along_axis(hitrow, col, axis=1)[:, 0]
-        ok = jnp.isfinite(lat) if has_cells else jnp.ones((c,), bool)
+        ok = jnp.isfinite(lat) if has_mask else jnp.ones((c,), bool)
+        if dl_c is not None:  # re-derived `lat` is bitwise the scan's
+            ok &= lat <= dl_c
         okv = ok if valid_c is None else ok & valid_c
         # first conflicting commit: a committed MISS mutates residency
         # (install + possible eviction), invalidating later frozen
@@ -1241,7 +1404,10 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             ) + (queue * ftok_c[i]) / params.flops_per_s
             choice = jnp.argmin(lats).astype(jnp.int32)
             lat_b = lats[choice]
-            ok_b = jnp.isfinite(lat_b) if has_cells else None
+            ok_b = jnp.isfinite(lat_b) if has_mask else None
+            if dl_c is not None:  # greedy: lats[choice] == min(lats)
+                admit = lat_b <= dl_c[i]
+                ok_b = admit if ok_b is None else ok_b & admit
             if valid_b is not None:
                 ok_b = valid_b if ok_b is None else ok_b & valid_b
             lru, queue, out_choice, hit_b = dense_commit(
@@ -1251,6 +1417,8 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
                 d = drain_c[i]
                 if valid_b is not None:
                     d = jnp.where(valid_b, d, 0.0)
+                if outage is not None:
+                    d = jnp.where(outage, 0.0, d)
                 queue = jnp.maximum(queue - d, 0.0)
             och = och.at[i].set(out_choice)
             olat = olat.at[i].set(lat_b)
@@ -1266,7 +1434,7 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     # (c, 3) strip of per-request scalars: one xs slice per step
     scalars = jnp.stack([gen, size_bits, flops_tok], axis=1)
     xs = tuple(map(chunks, (model, scalars, prompt, work,
-                            drains, cells, arrs, valid)))
+                            drains, cells, arrs, valid, dls)))
     carry, outs = jax.lax.scan(spec_chunk_step if use_spec else chunk_step,
                                carry, xs)
     lru, queue, clock, time_s = carry
@@ -1303,6 +1471,11 @@ def stats(outcome: RouteOutcome, *, cloud_index: Optional[int] = None) -> dict:
     complete). ``cloud_index`` — the cloud column's server index
     (conventionally the last) — adds the ``cloud_fallback_rate``, so
     call sites stop re-deriving it from raw choices.
+
+    When the outcome carries a ``cause`` channel, the per-cause
+    rejection rates (``infeasible_rate`` / ``admission_rate`` /
+    ``outage_rate``) are reported over ALL requests — the same
+    denominator as ``completion_rate``, so the four always sum to 1.
     """
     ok = outcome.choice >= 0
     n_ok = jnp.maximum(ok.sum(), 1)
@@ -1325,6 +1498,11 @@ def stats(outcome: RouteOutcome, *, cloud_index: Optional[int] = None) -> dict:
         out["cloud_fallback_rate"] = float(
             (outcome.choice == cloud_index).mean()
         )
+    if outcome.cause is not None:
+        for name, code in (("infeasible_rate", CAUSE_INFEASIBLE),
+                           ("admission_rate", CAUSE_ADMISSION),
+                           ("outage_rate", CAUSE_OUTAGE)):
+            out[name] = float((outcome.cause == code).mean())
     return out
 
 
@@ -1346,7 +1524,10 @@ def window_stats(outcome: RouteOutcome, window_id, num_windows: int, *,
     ``completed_means`` adds extra columns: each ``name -> (B,)``
     per-request value is averaged over the window's COMPLETED requests
     (values at rejected requests must already be zero — e.g.
-    ``workloads.simulate.request_energy_j``)."""
+    ``workloads.simulate.request_energy_j``). A ``cause`` channel on the
+    outcome adds per-window ``infeasible_rate`` / ``admission_rate`` /
+    ``outage_rate`` over the SAME all-requests denominator as
+    ``completion_rate`` (the four sum to 1 in every window)."""
     wid = np.asarray(window_id)
     choice = np.asarray(outcome.choice)
     ok = choice >= 0
@@ -1370,6 +1551,14 @@ def window_stats(outcome: RouteOutcome, window_id, num_windows: int, *,
         out["cloud_fallback_rate"] = np.bincount(
             wid, weights=(choice == cloud_index), minlength=num_windows
         ) / denom
+    if outcome.cause is not None:
+        cz = np.asarray(outcome.cause)
+        for name, code in (("infeasible_rate", CAUSE_INFEASIBLE),
+                           ("admission_rate", CAUSE_ADMISSION),
+                           ("outage_rate", CAUSE_OUTAGE)):
+            out[name] = np.bincount(
+                wid, weights=(cz == code), minlength=num_windows
+            ) / denom
     for name, vals in (completed_means or {}).items():
         out[name] = np.where(
             n_ok > 0,

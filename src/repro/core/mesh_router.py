@@ -67,6 +67,30 @@ EVERY server after EVERY request — a globally-sequential semantics that
 cannot be cell-partitioned. Use the time-based ``FleetParams.
 drain_rate`` instead.
 
+Robustness knobs
+----------------
+The single-device robustness knobs (``docs/robustness.md``) thread
+through unchanged: ``RequestBatch.deadline_s`` rides the buckets
+(padding rows carry ``+inf`` — no SLO), the ``outage`` mask is
+cell-blocked like every server column (an outaged cloud column is seen
+outaged by every cell, and the reconciliation replay freezes its
+drain), and ``outcome.cause`` is derived post-hoc from the scattered
+choices by the shared ``batch_router.rejection_cause`` — bitwise the
+single-device channel.
+
+Neighbour-cell spill (``FleetParams.spill``) breaks the premise of the
+cell-blocked path — a request may commit OUTSIDE its home block — so
+spill fleets take a FULL-REPLICATION variant instead: every device row
+holds the whole fleet, routes its cells' request buckets against the
+window-entry snapshot (same window semantics as the cloud columns,
+now applied to every server), and the carried state is rebuilt by one
+close-replay scan over the committed choices in global arrival order —
+the exact sequential fold of ``batch_router._commit``, decay included.
+Choices are bit-identical to single-device whenever a window's
+cross-cell feedback stays within one bucket (e.g. all real traffic in
+one cell), and the carried state is always the exact fold of the
+committed choices.
+
 Layout contract
 ---------------
 The fleet must be cell-major (``batch_router.cell_layout``): equal-size
@@ -131,7 +155,8 @@ def local_template_params(params: br.FleetParams) -> br.FleetParams:
 
 
 def _bucket_requests(reqs: br.RequestBatch, layout: br.CellLayout,
-                     c_pad: int, time0: float, has_time: bool):
+                     c_pad: int, time0: float, has_time: bool,
+                     keep_cells: bool = False):
     """Host-side bucketing of a (B,) request stream into dense
     ``(c_pad, bc)`` per-cell buckets (numpy; the result feeds the jitted
     mesh call).
@@ -139,9 +164,14 @@ def _bucket_requests(reqs: br.RequestBatch, layout: br.CellLayout,
     Real requests keep their arrival order inside their cell's bucket
     and carry inner cell 0; orphans (out-of-range ``cell``) are spread
     deterministically (global index mod C — device-count independent)
-    and carry ``_ORPHAN_CELL`` so they see only the cloud. Trailing
+    and carry ``_ORPHAN_CELL`` so they see only the cloud. With
+    ``keep_cells`` (the full-replication spill path, which routes each
+    bucket against GLOBAL params) every request keeps its true cell id
+    instead — orphans included, so the global mask prices them exactly
+    like the single-device call. Trailing
     padding rows carry ``prompt_bits = +inf`` (every score infeasible →
-    rejected → zero state mutation) and an arrival stamp no later than
+    rejected → zero state mutation), a ``+inf`` deadline (no SLO) and an
+    arrival stamp no later than
     the bucket's running clock (``dt = 0`` → the wall-clock decay is a
     bitwise no-op). ``gpos`` maps each bucket slot back to its global
     stream position (-1 on padding) — the outcome scatter and the LRU
@@ -174,7 +204,16 @@ def _bucket_requests(reqs: br.RequestBatch, layout: br.CellLayout,
     model_b[sortedb, slot] = model[order]
     prompt_b[sortedb, slot] = prompt[order]
     gen_b[sortedb, slot] = gen[order]
-    icell_b[sortedb, slot] = np.where(in_range[order], 0, _ORPHAN_CELL)
+    if keep_cells:
+        icell_b[sortedb, slot] = rcell[order].astype(np.int32)
+    else:
+        icell_b[sortedb, slot] = np.where(in_range[order], 0, _ORPHAN_CELL)
+
+    dl_b = None
+    if reqs.deadline_s is not None:
+        dl = np.asarray(reqs.deadline_s)
+        dl_b = np.full((c_pad, bc), np.inf, dl.dtype)
+        dl_b[sortedb, slot] = dl[order]
 
     arr_b = None
     if has_time:
@@ -190,7 +229,7 @@ def _bucket_requests(reqs: br.RequestBatch, layout: br.CellLayout,
         pad_counts[:c] = counts
         padmask = np.arange(bc)[None, :] >= pad_counts[:, None]
         arr_b = np.where(padmask, bmax[:, None], arr_b)
-    return model_b, prompt_b, gen_b, icell_b, arr_b, gpos
+    return model_b, prompt_b, gen_b, icell_b, arr_b, dl_b, gpos
 
 
 @functools.partial(
@@ -199,8 +238,8 @@ def _bucket_requests(reqs: br.RequestBatch, layout: br.CellLayout,
                      "chunk", "unroll", "backend", "speculative"),
 )
 def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
-                   gpos_b, gen_g, arr_g, *, mesh, axis, layout, c_pad, policy,
-                   actor, chunk, unroll, backend, speculative):
+                   dl_b, outage, gpos_b, gen_g, arr_g, *, mesh, axis, layout,
+                   c_pad, policy, actor, chunk, unroll, backend, speculative):
     policy_fn = br._resolve_policy(policy, actor)
     c, n, nc = layout.num_cells, layout.per_cell, layout.num_cloud
     ne, m = layout.num_edge, layout.per_cell + layout.num_cloud
@@ -208,6 +247,8 @@ def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
     b = int(gen_g.shape[0])
     dtype = jnp.result_type(prompt_b, params.uplink_bps)
     has_time = params.drain_rate is not None and arr_b is not None
+    has_dl = dl_b is not None
+    has_outage = outage is not None
     clock0 = state.clock
     time0 = jnp.asarray(
         state.time_s if state.time_s is not None else 0.0, dtype
@@ -244,6 +285,10 @@ def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
         ins.append(blocks(params.drain_rate))
     if has_time:
         ins.append(arr_b)
+    if has_dl:
+        ins.append(dl_b)
+    if has_outage:
+        ins.append(blocks(outage))
     n_shard = len(ins)
     repl = [params.size_bits, params.decode_flops_per_token, clock0, time0,
             local_cell]
@@ -255,8 +300,11 @@ def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
         def one_cell(cell_args):
             (fl, up, bh, slots, res, lu, q, mdl, pr, gn, icl,
              gp, *rest) = cell_args
-            dr = rest[0] if has_drain else None
-            ar = rest[-1] if has_time else None
+            rest = list(rest)
+            dr = rest.pop(0) if has_drain else None
+            ar = rest.pop(0) if has_time else None
+            dl = rest.pop(0) if has_dl else None
+            og = rest.pop(0) if has_outage else None
             p = br.FleetParams(
                 flops_per_s=fl, uplink_bps=up, backhaul_bps=bh,
                 cache_slots=slots, size_bits=size_bits,
@@ -265,10 +313,10 @@ def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
             s = br.FleetState(resident=res, last_use=lu, queue_tokens=q,
                               clock=clk0, time_s=t0)
             r = br.RequestBatch(model=mdl, prompt_bits=pr, gen_tokens=gn,
-                                cell=icl, arrival_s=ar)
+                                cell=icl, arrival_s=ar, deadline_s=dl)
             st, out = br._route_core(p, s, r, None, policy_fn, chunk=chunk,
                                      unroll=unroll, backend=backend,
-                                     speculative=speculative)
+                                     speculative=speculative, outage=og)
             # local -> global LRU clock remap: commits from THIS window
             # (> clock0 — stale entries, including pre-window values,
             # never exceed the entry clock) are rewritten to clock0 + 1
@@ -334,6 +382,10 @@ def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
         cloud_ids = ne + jnp.arange(nc, dtype=jnp.int32)
         rate_cloud = (params.drain_rate[ne:].astype(dtype)
                       if has_time else None)
+        if has_time and has_outage:
+            # frozen queue: an outaged cloud column stops draining, in
+            # the replay exactly as in every per-cell scan
+            rate_cloud = jnp.where(outage[ne:], 0.0, rate_cloud)
 
         def replay_step(carry, xs):
             qc, trun = carry
@@ -366,12 +418,136 @@ def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
                                       hit=hit)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "c_pad", "policy", "actor", "chunk",
+                     "unroll", "backend", "speculative"),
+)
+def _sharded_route_spill(params, state, model_b, prompt_b, gen_b, icell_b,
+                         arr_b, dl_b, outage, gpos_b, model_g, gen_g, arr_g,
+                         *, mesh, axis, c_pad, policy, actor, chunk, unroll,
+                         backend, speculative):
+    """Full-replication sharded route for spill fleets (module docstring:
+    robustness knobs). Every device row holds the WHOLE fleet; each cell
+    bucket routes against the window-entry snapshot with the GLOBAL
+    params (true cell ids, global spill adjacency — choices come out in
+    global server indices, so no LRU remap and no index map), and the
+    carried state is rebuilt by one close-replay scan over the committed
+    choices in global arrival order: the exact ``batch_router._commit``
+    fold, wall-clock decay and outage freeze included."""
+    policy_fn = br._resolve_policy(policy, actor)
+    b = int(model_g.shape[0])
+    dtype = jnp.result_type(prompt_b, params.uplink_bps)
+    has_time = params.drain_rate is not None and arr_b is not None
+    has_dl = dl_b is not None
+    has_outage = outage is not None
+    clock0 = state.clock
+    time0 = jnp.asarray(
+        state.time_s if state.time_s is not None else 0.0, dtype
+    )
+    queue0 = state.queue_tokens.astype(dtype)
+
+    sharded = [model_b, prompt_b, gen_b, icell_b]
+    if has_time:
+        sharded.append(arr_b)
+    if has_dl:
+        sharded.append(dl_b)
+    n_shard = len(sharded)
+    repl = [params, state] + ([outage] if has_outage else [])
+
+    def device_fn(*args):
+        sh = args[:n_shard]
+        p_full, s_full = args[n_shard], args[n_shard + 1]
+        og = args[n_shard + 2] if has_outage else None
+
+        def one_bucket(cell_args):
+            mdl, pr, gn, icl, *rest = cell_args
+            rest = list(rest)
+            ar = rest.pop(0) if has_time else None
+            dl = rest.pop(0) if has_dl else None
+            r = br.RequestBatch(model=mdl, prompt_bits=pr, gen_tokens=gn,
+                                cell=icl, arrival_s=ar, deadline_s=dl)
+            _, out = br._route_core(p_full, s_full, r, None, policy_fn,
+                                    chunk=chunk, unroll=unroll,
+                                    backend=backend, speculative=speculative,
+                                    outage=og)
+            # per-bucket state is discarded: the close replay below is
+            # the single source of truth for the carried fleet
+            return out.choice, out.latency, out.hit
+
+        return jax.vmap(one_bucket)(sh)
+
+    ch_o, lat_o, hit_o = sharding.shard_map(
+        device_fn, mesh=mesh,
+        in_specs=(P(axis),) * n_shard + (P(),) * len(repl),
+        out_specs=(P(axis),) * 3, check_vma=False,
+    )(*sharded, *repl)
+
+    # --- scatter outcomes back to the caller's stream order ---
+    gposf = gpos_b.reshape(-1)
+    safe = jnp.where(gposf >= 0, gposf, b)  # b: out of bounds -> dropped
+    choice = jnp.zeros((b,), jnp.int32).at[safe].set(
+        ch_o.reshape(-1), mode="drop")
+    latency = jnp.zeros((b,), dtype).at[safe].set(
+        lat_o.reshape(-1).astype(dtype), mode="drop")
+    hit = jnp.zeros((b,), bool).at[safe].set(hit_o.reshape(-1), mode="drop")
+
+    # --- close replay: sequential fold of the committed choices ---
+    drain_rate = params.drain_rate.astype(dtype) if has_time else None
+    if drain_rate is not None and has_outage:
+        drain_rate = jnp.where(outage, 0.0, drain_rate)
+    nsrv = int(params.flops_per_s.shape[0])
+
+    def commit_step(carry, xs):
+        resident, last_use, queue, clock, time_s = carry
+        if has_time:
+            model, gen_i, ch_i, a_i = xs
+            dt = jnp.maximum(a_i - time_s, 0.0)
+            queue = jnp.maximum(queue - drain_rate * dt, 0.0)
+            time_s = jnp.maximum(time_s, a_i)
+        else:
+            model, gen_i, ch_i = xs
+        clock = clock + 1
+        ok = ch_i >= 0
+        sel = jnp.clip(ch_i, 0, nsrv - 1)
+        # _commit's ok-gated branch, expression for expression
+        row = resident[sel]
+        was_resident = row[model]
+        full = row.sum() >= params.cache_slots[sel]
+        evict_idx = jnp.argmin(
+            jnp.where(row, last_use[sel], jnp.iinfo(jnp.int32).max)
+        )
+        evict = ~was_resident & full & ok
+        row = row.at[evict_idx].set(row[evict_idx] & ~evict)
+        row = row.at[model].set(row[model] | ok)
+        resident = resident.at[sel].set(row)
+        last_use = last_use.at[sel, model].set(
+            jnp.where(ok, clock, last_use[sel, model])
+        )
+        queue = queue.at[sel].add(jnp.where(ok, gen_i, 0.0))
+        return (resident, last_use, queue, clock, time_s), None
+
+    xs = (model_g, gen_g.astype(dtype), choice)
+    if has_time:
+        xs += (arr_g.astype(dtype),)
+    carry = (state.resident, state.last_use, queue0, clock0, time0)
+    (resident, last_use, queue, clock_f, time_f), _ = jax.lax.scan(
+        commit_step, carry, xs, unroll=min(64, b))
+
+    new_state = br.FleetState(resident=resident, last_use=last_use,
+                              queue_tokens=queue, clock=clock_f,
+                              time_s=time_f)
+    return new_state, br.RouteOutcome(choice=choice, latency=latency,
+                                      hit=hit)
+
+
 def route_batch_sharded(
     params: br.FleetParams,
     state: br.FleetState,
     reqs: br.RequestBatch,
     drain_tokens=None,
     *,
+    outage=None,
     mesh=None,
     num_devices: Optional[int] = None,
     policy="greedy",
@@ -389,6 +565,12 @@ def route_batch_sharded(
     through the unchanged scan/chunked/speculative machinery, and the
     shared cloud columns are reconciled at window close (module
     docstring: window semantics, exactness, layout contract).
+
+    Robustness knobs match ``route_batch``: ``reqs.deadline_s`` (SLO
+    admission), ``outage`` ((N,) bool fault mask in the caller's server
+    order) and ``params.spill`` — the last switches to the
+    full-replication path (module docstring: robustness knobs).
+    ``outcome.cause`` labels every rejection.
 
     Mesh selection: pass ``mesh`` (leading axis = the cell axis) or
     ``num_devices`` (a 1-axis ``("cells",)`` mesh over the first that
@@ -420,6 +602,11 @@ def route_batch_sharded(
         params, state = br.permute_fleet(params, state, order)
         layout = br.cell_layout(params)  # unequal cells still raise here
     c = layout.num_cells
+    if outage is not None:
+        outage = np.asarray(outage, bool)
+        if order is not None:  # follow the cell-major server permutation
+            outage = outage[order]
+        outage = jnp.asarray(outage)
 
     if layout.num_cells > 1 and reqs.cell is None:
         raise ValueError("multi-cell sharded routing needs RequestBatch.cell")
@@ -435,27 +622,40 @@ def route_batch_sharded(
     if b == 0:  # nothing to shard; keep the single-device fast path
         return br.route_batch(params, state, reqs, policy=policy,
                               actor=actor, chunk=chunk, unroll=unroll,
-                              backend=backend, speculative=speculative)
+                              backend=backend, speculative=speculative,
+                              outage=outage)
 
     c_pad = -(-c // d) * d
     has_time = params.drain_rate is not None and reqs.arrival_s is not None
     time0 = float(np.asarray(state.time_s)) if state.time_s is not None \
         else 0.0
-    model_b, prompt_b, gen_b, icell_b, arr_b, gpos = _bucket_requests(
-        reqs, layout, c_pad, time0, has_time)
+    has_spill = params.spill is not None and params.cell is not None
+    model_b, prompt_b, gen_b, icell_b, arr_b, dl_b, gpos = _bucket_requests(
+        reqs, layout, c_pad, time0, has_time, keep_cells=has_spill)
 
-    new_state, out = _sharded_route(
+    route_fn = _sharded_route_spill if has_spill else _sharded_route
+    layout_kw = {} if has_spill else {"layout": layout}
+    first = (reqs.model,) if has_spill else ()
+    new_state, out = route_fn(
         params, state,
         jnp.asarray(model_b), jnp.asarray(prompt_b), jnp.asarray(gen_b),
         jnp.asarray(icell_b),
         None if arr_b is None else jnp.asarray(arr_b),
+        None if dl_b is None else jnp.asarray(dl_b),
+        outage,
         jnp.asarray(gpos),
+        *first,
         reqs.gen_tokens,
         reqs.arrival_s if has_time else None,
-        mesh=mesh, axis=axis, layout=layout, c_pad=c_pad, policy=policy,
+        mesh=mesh, axis=axis, c_pad=c_pad, policy=policy,
         actor=actor, chunk=chunk, unroll=unroll, backend=backend,
-        speculative=speculative,
+        speculative=speculative, **layout_kw,
     )
+    # the cause channel is a post-hoc pure function of visibility, the
+    # outage mask and the scattered choices — shared with every other
+    # path, so the sharded rates agree bitwise (docs/robustness.md)
+    out = out._replace(
+        cause=br.rejection_cause(params, reqs, outage, out.choice))
 
     if order is not None:  # restore the caller's server ordering
         inv = np.argsort(order)

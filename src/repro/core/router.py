@@ -57,6 +57,15 @@ from repro.core.catalog import CatalogEntry
 #: Reserved cell id for cloud-fallback servers: visible from every cell.
 CLOUD_CELL = -1
 
+#: Rejection-cause codes shared by every router path (the batched and
+#: sharded paths re-export them; ``batch_router.rejection_cause`` is the
+#: formal definition). ``completion_rate + infeasible + admission +
+#: outage == 1`` over any batch.
+CAUSE_COMPLETED = 0   # routed and committed
+CAUSE_INFEASIBLE = 1  # no visible server at all (empty cell, no cloud)
+CAUSE_ADMISSION = 2   # best eq. 11 score exceeded the request's SLO
+CAUSE_OUTAGE = 3      # servers visible, but every one of them outaged
+
 
 @dataclasses.dataclass
 class EdgeServer:
@@ -70,6 +79,7 @@ class EdgeServer:
     queue_tokens: float = 0.0  # outstanding work, FIFO
     cell: int = 0              # edge site; CLOUD_CELL == visible fleet-wide
     drain_rate: float = 0.0    # tokens/sec completed continuously
+    outaged: bool = False      # fault injection: +inf column, frozen queue
 
 
 @dataclasses.dataclass
@@ -79,22 +89,32 @@ class Request:
     gen_tokens: int
     cell: int = 0              # which cell the requesting device sits in
     arrival_s: float | None = None  # wall-clock arrival (None: no time drain)
+    deadline_s: float | None = None  # SLO: reject if best score exceeds it
 
 
 class ModelAwareRouter:
     def __init__(self, servers: list[EdgeServer], catalog: list[CatalogEntry],
-                 policy: str = "greedy", actor=None):
+                 policy: str = "greedy", actor=None, spill=None):
         self.servers = servers
         self.catalog = {e.index: e for e in catalog}
         self.policy = policy
         self.actor = actor
         self.clock = 0
         self.time_s = 0.0  # wall clock for the time-based drain
+        #: (C, C) bool neighbour-cell adjacency: ``spill[rc][sc]`` makes
+        #: cell ``sc`` visible from cell ``rc`` at a backhaul surcharge.
+        self.spill = None if spill is None else np.asarray(spill, bool)
+        #: cause code of the LAST ``route`` call (CAUSE_*).
+        self.last_cause = None
 
     # ------------------------------------------------------------------
     def _candidate_latency(self, srv: EdgeServer, req: Request) -> float:
         entry = self.catalog[req.model]
         t_trans = req.prompt_bits / srv.uplink_bps                  # eq. (5)
+        if self._spilled(srv, req):
+            # neighbour-cell spill surcharge: the prompt crosses the
+            # inter-cell backhaul on top of the uplink
+            t_trans = t_trans + req.prompt_bits / srv.backhaul_bps
         t_switch = (
             0.0 if req.model in srv.resident
             else entry.switch_latency(srv.backhaul_bps)             # eq. (7)
@@ -116,32 +136,53 @@ class ModelAwareRouter:
             + backlog / (srv.flops_per_s + srv.drain_rate * ftok)
         )
 
+    def _spilled(self, srv: EdgeServer, req: Request) -> bool:
+        """True when ``srv`` is reachable only through the neighbour-cell
+        spill adjacency (never for home or cloud servers)."""
+        if self.spill is None or srv.cell == req.cell:
+            return False
+        c = len(self.spill)
+        if not (0 <= req.cell < c and 0 <= srv.cell < c):
+            return False  # orphan request / cloud server: no spill
+        return bool(self.spill[req.cell][srv.cell])
+
     def _visible(self, srv: EdgeServer, req: Request) -> bool:
-        """Cell visibility: in-cell servers plus the fleet-wide cloud."""
-        return srv.cell == req.cell or srv.cell == CLOUD_CELL
+        """Cell visibility: in-cell servers, the fleet-wide cloud, plus
+        any cell reachable through the ``spill`` adjacency."""
+        return (srv.cell == req.cell or srv.cell == CLOUD_CELL
+                or self._spilled(srv, req))
 
     def advance_time(self, t_s: float):
-        """Drain every queue by ``drain_rate * dt`` up to wall clock ``t_s``."""
+        """Drain every queue by ``drain_rate * dt`` up to wall clock
+        ``t_s``. Outaged servers' queues are frozen."""
         dt = max(float(t_s) - self.time_s, 0.0)
         for s in self.servers:
-            s.queue_tokens = max(0.0, s.queue_tokens - s.drain_rate * dt)
+            if not s.outaged:
+                s.queue_tokens = max(0.0, s.queue_tokens - s.drain_rate * dt)
         self.time_s = max(self.time_s, float(t_s))
 
     def route(self, req: Request) -> tuple[int, float]:
-        """Returns (server index, predicted latency) and commits state."""
+        """Returns (server index, predicted latency) and commits state.
+
+        A rejection (-1, inf) leaves the fleet untouched and records why
+        in ``self.last_cause``: no visible server (CAUSE_INFEASIBLE),
+        every visible server outaged (CAUSE_OUTAGE), or the best eq. 11
+        score above the request's ``deadline_s`` (CAUSE_ADMISSION)."""
         if req.arrival_s is not None:
             self.advance_time(req.arrival_s)
         self.clock += 1
         lats = [
-            self._candidate_latency(s, req) if self._visible(s, req)
+            self._candidate_latency(s, req)
+            if self._visible(s, req) and not s.outaged
             else float("inf")
             for s in self.servers
         ]
         if self.policy == "actor" and self.actor is not None:
             choice = int(self.actor(self._observe(req), lats))
-            if not self._visible(self.servers[choice], req):
-                # never commit an out-of-cell actor choice — fall back to
-                # the masked greedy argmin (mirrors the batched path)
+            if not np.isfinite(lats[choice]):
+                # never commit a masked (out-of-cell / outaged) actor
+                # choice — fall back to the masked greedy argmin
+                # (mirrors the batched path's finiteness clamp)
                 choice = int(np.argmin(lats))
         elif self.policy == "drain":
             scores = [
@@ -152,10 +193,20 @@ class ModelAwareRouter:
             choice = int(np.argmin(scores))
         else:
             choice = int(np.argmin(lats))
-        if not np.isfinite(lats[choice]):
-            # no feasible server (cell with no members and no cloud
-            # column): reject without mutating any state
+        best = min(lats)
+        deadline = float("inf") if req.deadline_s is None \
+            else float(req.deadline_s)
+        if not np.isfinite(lats[choice]) or best > deadline:
+            # reject without mutating any state; the SLO check compares
+            # the BEST score, so it never depends on the policy's pick
+            if np.isfinite(best):
+                self.last_cause = CAUSE_ADMISSION
+            elif any(self._visible(s, req) for s in self.servers):
+                self.last_cause = CAUSE_OUTAGE
+            else:
+                self.last_cause = CAUSE_INFEASIBLE
             return -1, float("inf")
+        self.last_cause = CAUSE_COMPLETED
         srv = self.servers[choice]
         # commit: LRU residency + queue
         if req.model not in srv.resident:
@@ -178,9 +229,11 @@ class ModelAwareRouter:
         return np.asarray(obs, np.float32)
 
     def drain(self, tokens: float):
-        """Advance time: every server completes ``tokens`` of queued work."""
+        """Advance time: every server completes ``tokens`` of queued
+        work. Outaged servers' queues are frozen."""
         for s in self.servers:
-            s.queue_tokens = max(0.0, s.queue_tokens - tokens)
+            if not s.outaged:
+                s.queue_tokens = max(0.0, s.queue_tokens - tokens)
 
     def stats(self, requests, latencies):
         hits = sum(

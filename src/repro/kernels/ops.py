@@ -58,7 +58,7 @@ def route_score(
     prompt_bits, size_bits, flops_tok, work,
     uplink_bps, backhaul_bps, flops_per_s,
     queue_tokens=None, resident=None, model=None,
-    req_cell=None, srv_cell=None,
+    req_cell=None, srv_cell=None, spill=None,
     *, cloud_cell: int = -1, backend: str = "xla",
 ):
     """Fused (B, N) eq. 11 routing-score matrix (see ``route_score.py``).
@@ -75,12 +75,14 @@ def route_score(
             prompt_bits, size_bits, flops_tok, work,
             uplink_bps, backhaul_bps, flops_per_s,
             queue_tokens=queue_tokens, resident=resident, model=model,
-            req_cell=req_cell, srv_cell=srv_cell, cloud_cell=cloud_cell,
+            req_cell=req_cell, srv_cell=srv_cell, spill=spill,
+            cloud_cell=cloud_cell,
             interpret=_INTERPRET or backend == "pallas-interpret",
         )
     return ref.route_score_xla(
         prompt_bits, size_bits, flops_tok, work,
         uplink_bps, backhaul_bps, flops_per_s,
         queue_tokens=queue_tokens, resident=resident, model=model,
-        req_cell=req_cell, srv_cell=srv_cell, cloud_cell=cloud_cell,
+        req_cell=req_cell, srv_cell=srv_cell, spill=spill,
+        cloud_cell=cloud_cell,
     )

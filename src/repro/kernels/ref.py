@@ -227,7 +227,7 @@ def route_score_xla(
     prompt_bits, size_bits, flops_tok, work,
     uplink_bps, backhaul_bps, flops_per_s,
     queue_tokens=None, resident=None, model=None,
-    req_cell=None, srv_cell=None, cloud_cell=-1,
+    req_cell=None, srv_cell=None, cloud_cell=-1, spill=None,
 ):
     """XLA oracle for the fused (B, N) routing-score kernel.
 
@@ -236,6 +236,13 @@ def route_score_xla(
     ``core.costs.edge_score_matrix`` (the single home of the cost
     model), with the residency gather and the multi-cell visibility
     mask applied here. Out-of-cell, non-cloud pairs score ``+inf``.
+
+    ``spill`` — an optional (C, C) bool neighbour-cell adjacency — adds
+    spilled pairs (adjacent cell, not home, not cloud) to the visible
+    set and prices them with the backhaul surcharge
+    ``prompt_bits / backhaul_bps`` (the prompt crosses the inter-cell
+    backhaul on top of the uplink — the same generalisation the cloud
+    column folds into its effective uplink).
     """
     from repro.core import costs  # leaf module (jnp-only): no cycle
 
@@ -246,8 +253,19 @@ def route_score_xla(
         queue_tokens=queue_tokens, resident=res_bn,
     )
     if req_cell is not None and srv_cell is not None:
-        visible = (srv_cell[None, :] == req_cell[:, None]) | (
-            srv_cell[None, :] == cloud_cell
-        )
+        home = srv_cell[None, :] == req_cell[:, None]
+        visible = home | (srv_cell[None, :] == cloud_cell)
+        if spill is not None:
+            nc = spill.shape[0]
+            rok = (req_cell >= 0) & (req_cell < nc)
+            sok = (srv_cell >= 0) & (srv_cell < nc)
+            adj = spill[jnp.clip(req_cell, 0, nc - 1)][
+                :, jnp.clip(srv_cell, 0, nc - 1)
+            ]
+            spilled = adj & rok[:, None] & sok[None, :] & ~home
+            score = score + jnp.where(
+                spilled, prompt_bits[:, None] / backhaul_bps[None, :], 0.0
+            )
+            visible = visible | spilled
         score = jnp.where(visible, score, jnp.inf)
     return score

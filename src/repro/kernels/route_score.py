@@ -41,8 +41,8 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def _kernel(*refs, has_switch, has_resident, has_cells, cloud_cell,
-            out_dtype):
+def _kernel(*refs, has_switch, has_resident, has_cells, has_spill,
+            cloud_cell, out_dtype):
     refs = list(refs)
     req = refs.pop(0)[...]  # (8, bb) request strip (compute dtype)
     srv = refs.pop(0)[...]  # (8, bn) server strip
@@ -74,9 +74,23 @@ def _kernel(*refs, has_switch, has_resident, has_cells, cloud_cell,
     if has_cells:
         req_cell = refs.pop(0)[...]                # (1, bb) int32
         srv_cell = refs.pop(0)[...]                # (1, bn) int32
-        visible = (srv_cell[0][None, :] == req_cell[0][:, None]) | (
-            srv_cell[0][None, :] == cloud_cell
-        )
+        home = srv_cell[0][None, :] == req_cell[0][:, None]
+        visible = home | (srv_cell[0][None, :] == cloud_cell)
+        if has_spill:
+            # neighbour-cell spill: the adjacency row is gathered by the
+            # same MXU trick as the residency gate — one-hot(req_cell)
+            # (bb, Cp) @ adjacency columns (Cp, bn); OOB request cells
+            # have all-zero one-hot rows, so orphans never spill
+            oh_cell = refs.pop(0)[...]             # (bb, Cp)
+            adj_srv = refs.pop(0)[...]             # (Cp, bn)
+            spilled = jax.lax.dot_general(
+                oh_cell, adj_srv, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) > 0.5
+            spilled = spilled & ~home
+            # backhaul surcharge: the prompt crosses the inter-cell link
+            score = score + jnp.where(spilled, prompt / backhaul, 0.0)
+            visible = visible | spilled
         score = jnp.where(visible, score, jnp.inf)
     refs[0][...] = score.astype(out_dtype)
 
@@ -95,7 +109,7 @@ def route_score(
     prompt_bits, size_bits, flops_tok, work,
     uplink_bps, backhaul_bps, flops_per_s,
     queue_tokens=None, resident=None, model=None,
-    req_cell=None, srv_cell=None,
+    req_cell=None, srv_cell=None, spill=None,
     *, cloud_cell: int = -1, block_b: int = 128, block_n: int = 128,
     interpret: bool = False, out_dtype=None,
 ):
@@ -106,11 +120,14 @@ def route_score(
     ``size_bits=None`` drops the eq. 7 term entirely and
     ``queue_tokens=None`` the backlog term — the chunked router's
     switch-free base. ``req_cell``/``srv_cell`` fuse the block-diagonal
-    visibility mask (out-of-cell pairs score ``+inf``).
+    visibility mask (out-of-cell pairs score ``+inf``); ``spill`` (a
+    (C, C) bool adjacency) widens it with backhaul-priced neighbour-cell
+    pairs (surcharge ``prompt_bits / backhaul_bps``).
     """
     has_switch = size_bits is not None
     has_resident = has_switch and resident is not None
     has_cells = req_cell is not None and srv_cell is not None
+    has_spill = has_cells and spill is not None
     if has_resident and model is None:
         raise ValueError("resident gating requires the request model ids")
     b, n = prompt_bits.shape[0], uplink_bps.shape[0]
@@ -162,11 +179,29 @@ def route_score(
             pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
         ]
         inputs += [rc, sc]
+    if has_spill:
+        ncell = spill.shape[0]
+        cp = _round_up(ncell, 128)
+        # one_hot maps OOB cells (orphans, CLOUD_CELL) to all-zero rows
+        oh_cell = jax.nn.one_hot(req_cell.astype(jnp.int32), cp,
+                                 dtype=jnp.float32)
+        oh_cell = jnp.pad(oh_cell, ((0, bp - b), (0, 0)))
+        sc_i = srv_cell.astype(jnp.int32)
+        in_range = (sc_i >= 0) & (sc_i < ncell)
+        adj_srv = spill.astype(jnp.float32)[:, jnp.clip(sc_i, 0, ncell - 1)]
+        adj_srv = adj_srv * in_range[None, :].astype(jnp.float32)
+        adj_srv = jnp.pad(adj_srv, ((0, cp - ncell), (0, np_ - n)))
+        in_specs += [
+            pl.BlockSpec((block_b, cp), lambda i, j: (i, 0)),
+            pl.BlockSpec((cp, block_n), lambda i, j: (0, j)),
+        ]
+        inputs += [oh_cell, adj_srv]
 
     out = pl.pallas_call(
         functools.partial(
             _kernel, has_switch=has_switch, has_resident=has_resident,
-            has_cells=has_cells, cloud_cell=cloud_cell, out_dtype=out_dtype,
+            has_cells=has_cells, has_spill=has_spill,
+            cloud_cell=cloud_cell, out_dtype=out_dtype,
         ),
         grid=grid,
         in_specs=in_specs,

@@ -139,22 +139,63 @@ def resolve_policy_flag(policy, fleet_params, *, sharded=False):
 
     ``sharded=True`` builds the actor against the cell-block-local
     geometry (``policies.actor_policy_for_cell_blocks``) so the one
-    closure serves every shard of ``route_batch_sharded``."""
+    closure serves every shard of ``route_batch_sharded``.
+
+    Checkpoint problems surface as a clean ``SystemExit`` (missing dir,
+    no committed step, corrupt manifest/arrays, wrong checkpoint kind)
+    instead of a traceback from deep inside the restore path."""
     if isinstance(policy, str) and policy.startswith("actor:"):
         ckpt = policy.split(":", 1)[1]
-        if not sharded:
-            return policies.load_actor_policy(ckpt, fleet_params)
-        params, spec, extra = policies.load_actor_checkpoint(ckpt)
-        return policies.actor_policy_for_cell_blocks(
-            params, spec, fleet_params,
-            model_aware=extra.get("model_aware", True),
-        )
+        if not ckpt:
+            raise SystemExit(
+                "serve: --policy actor: needs a checkpoint directory, e.g. "
+                "--policy actor:benchmarks/results/actor_ckpt"
+            )
+        try:
+            if not sharded:
+                return policies.load_actor_policy(ckpt, fleet_params)
+            params, spec, extra = policies.load_actor_checkpoint(ckpt)
+            return policies.actor_policy_for_cell_blocks(
+                params, spec, fleet_params,
+                model_aware=extra.get("model_aware", True),
+            )
+        except (FileNotFoundError, NotADirectoryError) as e:
+            raise SystemExit(
+                f"serve: no actor checkpoint at {ckpt!r}: {e}\n"
+                "train one with benchmarks/policy_serving.py (it saves "
+                "under benchmarks/results/actor_ckpt)"
+            ) from e
+        except (ValueError, KeyError, OSError, TypeError) as e:
+            raise SystemExit(
+                f"serve: could not restore actor checkpoint {ckpt!r}: "
+                f"{type(e).__name__}: {e}\n"
+                "the directory exists but is not a readable "
+                "core.policies.save_actor_checkpoint layout "
+                "(step_<N>/manifest.json + committed arrays)"
+            ) from e
     return policy
+
+
+def validate_mesh_flag(mesh):
+    """Fail fast — BEFORE any tracing — when ``--mesh D`` asks for more
+    devices than this process can see. ``jax.Mesh`` would reject the
+    device array anyway, but only after the fleet/stream setup work, and
+    with a shape error that doesn't mention the XLA_FLAGS escape hatch."""
+    if mesh is None:
+        return
+    avail = jax.local_device_count()
+    if mesh < 1 or mesh > avail:
+        raise SystemExit(
+            f"serve: --mesh {mesh} needs {mesh} local devices but only "
+            f"{avail} are available; on CPU hosts expose more via "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8"
+        )
 
 
 def serve(num_requests=32, n_servers=3, policy="greedy", execute=True, seed=0,
           gen_tokens=8, n_cells=1, drain_rate=0.0, arrival_rate=None,
           chunk=None, backend=None, scenario="steady", mesh=None):
+    validate_mesh_flag(mesh)
     # serve the edge-suitable (small) members of the catalogue
     edge_archs = ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
     catalog = build_catalog(edge_archs)

@@ -10,8 +10,11 @@ Three modules, one pipeline:
   * :mod:`repro.workloads.scenario` — the declarative ``ScenarioSpec``
     pytree plus the registry of named scenarios (``steady``, ``bursty``,
     ``diurnal``, ``flash-crowd``, ``popularity-drift``,
-    ``hotspot-cell``); ``compile_scenario`` turns a spec into a
-    ``core.batch_router.RequestBatch`` for any fleet topology.
+    ``hotspot-cell``, and the degraded-service family ``slo-mix`` /
+    ``flash-crowd-outage`` / ``drain-outage``); ``compile_scenario``
+    turns a spec into a ``core.batch_router.RequestBatch`` for any
+    fleet topology, and a ``FaultSpec`` schedules server outages /
+    drain stalls against the stream's wall clock.
   * :mod:`repro.workloads.simulate` — the long-horizon episode runner:
     windows an arbitrarily long stream into chunked ``route_batch``
     calls, carries ``FleetState`` across windows and aggregates
@@ -22,6 +25,7 @@ Three modules, one pipeline:
 drive it end to end; ``docs/scenarios.md`` is the guide.
 """
 from repro.workloads.scenario import (  # noqa: F401
+    FaultSpec,
     ScenarioSpec,
     compile_scenario,
     get_scenario,

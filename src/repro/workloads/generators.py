@@ -235,6 +235,19 @@ def sample_cells(rng: np.random.Generator, n: int, num_cells: int,
     return sample_categorical(rng, n, probs)
 
 
+def sample_deadlines(rng: np.random.Generator, n: int,
+                     mix) -> Optional[np.ndarray]:
+    """SLO deadline column: categorical draws from a
+    ``((deadline_s, weight), ...)`` mix (``float("inf")`` entries carry
+    no SLO). An empty/None mix returns ``None`` — no deadline column,
+    and the admission check compiles out of the router entirely."""
+    if not mix:
+        return None
+    vals = np.asarray([v for v, _ in mix], float)
+    weights = [w for _, w in mix]
+    return vals[sample_categorical(rng, n, weights)]
+
+
 def stream_fields(rng: np.random.Generator, n: int, num_models: int, *,
                   model_probs=None, model_rows=None,
                   prompt_bits=(1e5, 1e6), gen_tokens=(8, 128),
@@ -265,4 +278,6 @@ def to_request_batch(fields: dict, arrivals: Optional[np.ndarray]):
               else jnp.asarray(fields["cell"], jnp.int32)),
         arrival_s=(None if arrivals is None
                    else jnp.asarray(arrivals, jnp.float32)),
+        deadline_s=(None if fields.get("deadline_s") is None
+                    else jnp.asarray(fields["deadline_s"], jnp.float32)),
     )

@@ -24,6 +24,21 @@ see ``docs/scenarios.md`` for the full table:
     about)
   * ``hotspot-cell``      — one cell absorbs most traffic (cell-mask /
     cloud-fallback stress)
+
+plus the DEGRADED-SERVICE family (``docs/robustness.md``;
+``benchmarks/degraded_suite.py`` runs it end to end):
+
+  * ``slo-mix``           — steady traffic with a mixed-SLO deadline
+    column (admission-control stress)
+  * ``flash-crowd-outage``— the flash-crowd spike while one server is
+    down, under SLO admission (the overload-economy acceptance case)
+  * ``drain-outage``      — the spike while a server's DRAIN stalls
+    (it still accepts work, its backlog just stops moving)
+
+A spec may carry a ``FaultSpec``: ``(server, start_s, end_s)`` fault
+windows that ``workloads.simulate`` lowers to per-window ``outage``
+masks (full outage: ``+inf`` column + frozen queue) or drain stalls
+(``drain_rate -> 0``, still routable).
 """
 from __future__ import annotations
 
@@ -32,6 +47,25 @@ from typing import NamedTuple, Optional
 import numpy as np
 
 from repro.workloads import generators as gen
+
+
+class FaultSpec(NamedTuple):
+    """Fault-injection schedule for one scenario (flat, serialisable).
+
+    Both fields are tuples of ``(server_index, start_s, end_s)`` windows
+    against the request stream's wall clock (half-open: a window is
+    active while ``start_s <= t < end_s``):
+
+      * ``outages`` — full server outages: the column scores ``+inf``
+        (never routed to; rejections report ``CAUSE_OUTAGE``) and the
+        queue freezes — no drain while down.
+      * ``drain_outages`` — drain stalls: the server keeps ACCEPTING
+        work at its normal price but its continuous ``drain_rate``
+        drops to zero, so backlog accumulates silently.
+    """
+
+    outages: tuple = ()
+    drain_outages: tuple = ()
 
 
 class ScenarioSpec(NamedTuple):
@@ -68,6 +102,9 @@ class ScenarioSpec(NamedTuple):
     # length distributions
     prompt_bits: tuple = (1e5, 1e6)
     gen_tokens: tuple = (8, 128)
+    # robustness knobs (docs/robustness.md)
+    deadline_mix: tuple = ()   # ((deadline_s, weight), ...); () = no SLO
+    faults: FaultSpec = FaultSpec()
 
 
 def _arrivals(spec: ScenarioSpec, rng: np.random.Generator) -> np.ndarray:
@@ -97,9 +134,11 @@ def compile_scenario(spec: ScenarioSpec, *, seed: int, num_models: int,
     Determinism: the arrival process, the drift permutations and each
     per-request column draw from independent ``SeedSequence`` children
     of ``seed``, so the same ``(spec, seed, num_models, num_cells)``
-    regenerates the stream bit-identically in any process."""
-    rng_arr, rng_drift, rng_model, rng_prompt, rng_gen, rng_cell = \
-        gen.component_rngs(seed, 6)
+    regenerates the stream bit-identically in any process. (The
+    deadline child is LAST in the spawn order, so pre-SLO scenarios
+    regenerate their exact historical streams.)"""
+    (rng_arr, rng_drift, rng_model, rng_prompt, rng_gen, rng_cell,
+     rng_deadline) = gen.component_rngs(seed, 7)
     arrivals = _arrivals(spec, rng_arr)
 
     model_probs = model_rows = None
@@ -127,6 +166,8 @@ def compile_scenario(spec: ScenarioSpec, *, seed: int, num_models: int,
         "gen_tokens": gen.sample_gen_tokens(rng_gen, n, *spec.gen_tokens),
         "cell": (gen.sample_cells(rng_cell, n, num_cells, cell_probs)
                  if num_cells > 1 else None),
+        "deadline_s": gen.sample_deadlines(rng_deadline, n,
+                                           spec.deadline_mix),
     }
     return gen.to_request_batch(fields, arrivals)
 
@@ -174,3 +215,28 @@ register(ScenarioSpec(name="popularity-drift", arrival="poisson", rate=200.0,
                       zipf_s=1.5, drift_period_s=0.1))
 register(ScenarioSpec(name="hotspot-cell", arrival="poisson", rate=200.0,
                       zipf_s=1.5, hotspot_cell=0, hotspot_weight=0.7))
+
+# --- degraded-service family (docs/robustness.md) --------------------------
+# Deadlines are in seconds of predicted eq. 11 latency; the mixes keep a
+# no-SLO share so completion never collapses to the strictest class.
+register(ScenarioSpec(name="slo-mix", arrival="poisson", rate=200.0,
+                      zipf_s=1.5,
+                      deadline_mix=((0.1, 0.25), (1.0, 0.5),
+                                    (float("inf"), 0.25))))
+# Uniform popularity (zipf 0): the heavyweight models keep their full
+# token share, so the backlog term — not the uplink — dominates the
+# eq. 11 score and the SLO can act as the queue's relief valve. The
+# outage takes down BOTH servers of cell 0 (the whole cell), so
+# rejections split honestly between CAUSE_ADMISSION and CAUSE_OUTAGE.
+register(ScenarioSpec(name="flash-crowd-outage", arrival="flash", rate=100.0,
+                      spike_start_s=3.0, spike_dur_s=1.0, spike_mult=20.0,
+                      zipf_s=0.0,
+                      deadline_mix=((0.02, 0.6), (0.25, 0.25),
+                                    (float("inf"), 0.15)),
+                      faults=FaultSpec(outages=((0, 3.0, 4.5),
+                                                (1, 3.0, 4.5)))))
+register(ScenarioSpec(name="drain-outage", arrival="flash", rate=100.0,
+                      spike_start_s=3.0, spike_dur_s=1.0, spike_mult=20.0,
+                      zipf_s=1.5,
+                      faults=FaultSpec(drain_outages=((0, 3.0, 4.5),
+                                                      (1, 3.0, 4.5)))))

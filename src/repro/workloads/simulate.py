@@ -82,7 +82,9 @@ class SimResult(NamedTuple):
     ``batch_router.window_stats``; the queue percentiles are over the
     EDGE servers' outstanding tokens at each window's end (the cloud
     column, when present, is excluded — its depth only dilutes the edge
-    signal)."""
+    signal). The per-cause rejection rates share the window-size
+    denominator with ``completion_rate``, so the four series sum to 1
+    in every window (``docs/robustness.md``)."""
 
     window_start_s: np.ndarray    # first arrival in the window
     window_end_s: np.ndarray      # last arrival in the window
@@ -95,6 +97,20 @@ class SimResult(NamedTuple):
     queue_p50: np.ndarray         # edge queue depth percentiles at window end
     queue_p90: np.ndarray
     queue_max: np.ndarray
+    infeasible_rate: Optional[np.ndarray] = None  # no visible server
+    admission_rate: Optional[np.ndarray] = None   # best score > deadline_s
+    outage_rate: Optional[np.ndarray] = None      # all visible servers down
+
+
+def _fault_mask(windows, n: int, t: float) -> np.ndarray:
+    """(n,) bool: servers whose ``(server, start_s, end_s)`` fault
+    window is active at wall clock ``t`` (half-open, ``start <= t <
+    end``)."""
+    mask = np.zeros(n, bool)
+    for srv, start, end in windows:
+        if start <= t < end:
+            mask[int(srv)] = True
+    return mask
 
 
 def simulate(params: br.FleetParams, state: br.FleetState,
@@ -103,7 +119,8 @@ def simulate(params: br.FleetParams, state: br.FleetState,
              chunk: Optional[int] = None, unroll: int = 8,
              backend: Optional[str] = None,
              cloud_index: Optional[int] = None,
-             mesh=None, num_devices: Optional[int] = None):
+             mesh=None, num_devices: Optional[int] = None,
+             faults=None):
     """Route ``reqs`` through W sequential windows, carrying the fleet
     state across window boundaries; returns ``(state, outcome, series)``
     with ``outcome`` the concatenated ``RouteOutcome`` of the whole
@@ -120,7 +137,15 @@ def simulate(params: br.FleetParams, state: br.FleetState,
     window IS the sharded router's reconciliation window, so cells see
     each other's cloud commits at exactly the boundaries the series
     samples. Mutually exclusive with ``drain_tokens`` (a cross-cell
-    sequential coupling the sharded window model cannot honour)."""
+    sequential coupling the sharded window model cannot honour).
+
+    ``faults`` (a ``workloads.scenario.FaultSpec``) injects server
+    faults: each window is routed under the fault masks active at its
+    FIRST arrival — full ``outages`` become the router's ``outage``
+    mask (``+inf`` column, frozen queue, ``CAUSE_OUTAGE`` rejections),
+    ``drain_outages`` zero the affected servers' ``drain_rate`` (they
+    keep accepting work). Fault-free windows compile the knobs out, so
+    a schedule costs at most one extra jit program."""
     sharded = mesh is not None or num_devices is not None
     if sharded:
         if drain_tokens is not None:
@@ -130,26 +155,58 @@ def simulate(params: br.FleetParams, state: br.FleetState,
                 "drop the mesh or use params.drain_rate time-based drain"
             )
         from repro.core import mesh_router
+    n_srv = int(np.asarray(params.flops_per_s).shape[0])
+    if faults is not None and (faults.outages or faults.drain_outages):
+        for srv, _, _ in (*faults.outages, *faults.drain_outages):
+            if not 0 <= int(srv) < n_srv:
+                raise ValueError(
+                    f"fault window names server {srv} but the fleet has "
+                    f"{n_srv} servers"
+                )
+        if reqs.arrival_s is None:
+            raise ValueError(
+                "fault windows are scheduled against wall-clock arrival "
+                "stamps; the request stream carries none (arrival_s=None)"
+            )
+        if faults.drain_outages and params.drain_rate is None:
+            raise ValueError(
+                "drain_outages stall FleetParams.drain_rate, but this "
+                "fleet has no continuous drain configured"
+            )
+    else:
+        faults = None
     b = int(reqs.model.shape[0])
     w = max(1, int(window_requests))
     n_windows = max(1, math.ceil(b / w))
     outs, q50, q90, qmax = [], [], [], []
+    arr_np = (np.asarray(reqs.arrival_s)
+              if reqs.arrival_s is not None else None)
     for i in range(n_windows):
         sl = slice(i * w, min((i + 1) * w, b))
         win = jax.tree.map(lambda x: x[sl], reqs)
         dw = drain_tokens
         if dw is not None and np.ndim(dw) == 1:
             dw = dw[sl]
+        params_w, outage = params, None
+        if faults is not None:
+            t = float(arr_np[sl.start])  # the window's first arrival
+            om = _fault_mask(faults.outages, n_srv, t)
+            if om.any():
+                outage = jnp.asarray(om)
+            dm = _fault_mask(faults.drain_outages, n_srv, t)
+            if dm.any():  # stalled drain: still routable, backlog grows
+                params_w = params._replace(drain_rate=jnp.where(
+                    jnp.asarray(dm), 0.0, params.drain_rate))
         if sharded:
             state, out = mesh_router.route_batch_sharded(
-                params, state, win, mesh=mesh, num_devices=num_devices,
+                params_w, state, win, mesh=mesh, num_devices=num_devices,
                 policy=policy, actor=actor, chunk=chunk, unroll=unroll,
-                backend=backend)
+                backend=backend, outage=outage)
         else:
-            state, out = br.route_batch(params, state, win, dw,
+            state, out = br.route_batch(params_w, state, win, dw,
                                         policy=policy, actor=actor,
                                         chunk=chunk, unroll=unroll,
-                                        backend=backend)
+                                        backend=backend, outage=outage)
         outs.append(out)
         q = np.asarray(state.queue_tokens)
         if cloud_index is not None:
@@ -185,5 +242,8 @@ def simulate(params: br.FleetParams, state: br.FleetState,
         cloud_fallback_rate=stats.get("cloud_fallback_rate"),
         queue_p50=np.asarray(q50), queue_p90=np.asarray(q90),
         queue_max=np.asarray(qmax),
+        infeasible_rate=stats.get("infeasible_rate"),
+        admission_rate=stats.get("admission_rate"),
+        outage_rate=stats.get("outage_rate"),
     )
     return state, outcome, series

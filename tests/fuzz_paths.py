@@ -18,6 +18,16 @@ Fleets are drain-free and either cloud-free or single-cell-stream
 (cloud on): the configurations where the sharded window is bitwise
 (see ``core.mesh_router``). The sharded path is compared BITWISE
 against the scan — any drift is a real bug, not tolerance noise.
+
+The robustness knobs (``docs/robustness.md``) fuzz the same invariant
+with ``deadline=True`` (a mixed-SLO deadline column), ``spill=True``
+(a random zero-diagonal neighbour-cell adjacency; the stream collapses
+to cell 0, the regime where the sharded full-replication spill path is
+bitwise) and ``outage=True`` (a ~30% random server-outage mask). All
+paths must then ALSO agree on the per-request rejection cause, and the
+oracle's ``last_cause`` must match bit for bit. The knobs draw from a
+separate rng stream, so knob-free calls regenerate the exact historical
+scenarios of the seed-pinned tests.
 """
 import copy
 
@@ -70,34 +80,62 @@ def _random_scenario(seed, n_cells, per_cell, cloud):
     return fleet, stream
 
 
-def check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk):
+def check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk,
+                             deadline=False, spill=False, outage=False):
     fleet, (models, bits, toks, cells, arrivals) = _random_scenario(
         seed, n_cells, per_cell, cloud
     )
+    # the robustness knobs draw from their OWN rng so knob-free calls
+    # regenerate the exact scenarios the seed-pinned tests expect
+    knob_rng = np.random.default_rng([seed, 0xB0B])
+    n = len(models)
+    dl = adj = out_mask = None
+    if deadline:  # mixed SLO classes: tight / loose / none
+        dl = knob_rng.choice([0.05, 5.0, np.inf], size=n)
+    if spill:
+        # zero-diagonal adjacency; stream collapses to cell 0 — the
+        # single-bucket regime where the sharded spill path is bitwise
+        adj = knob_rng.random((n_cells, n_cells)) < 0.6
+        np.fill_diagonal(adj, False)
+        cells = np.zeros_like(cells)
+    if outage:
+        out_mask = knob_rng.random(len(fleet)) < 0.3
     params, state0 = br.fleet_from_servers(fleet, CATALOG)
+    if spill:
+        params = params._replace(spill=jnp.asarray(adj))
+    outage_arr = None if out_mask is None else jnp.asarray(out_mask)
     reqs = br.RequestBatch(
         model=jnp.asarray(models, jnp.int32),
         prompt_bits=jnp.asarray(bits, jnp.float32),
         gen_tokens=jnp.asarray(toks, jnp.float32),
         cell=jnp.asarray(cells, jnp.int32),
         arrival_s=jnp.asarray(arrivals, jnp.float32),
+        deadline_s=None if dl is None else jnp.asarray(dl, jnp.float32),
     )
-    st_scan, out_scan = br.route_batch(params, state0, reqs, policy=policy)
+    st_scan, out_scan = br.route_batch(params, state0, reqs, policy=policy,
+                                       outage=outage_arr)
     runs = {
         "chunked": br.route_batch(params, state0, reqs, policy=policy,
-                                  chunk=chunk, speculative=False),
+                                  chunk=chunk, speculative=False,
+                                  outage=outage_arr),
         "speculative": br.route_batch(params, state0, reqs, policy=policy,
-                                      chunk=chunk, speculative=True),
+                                      chunk=chunk, speculative=True,
+                                      outage=outage_arr),
         "sharded": mr.route_batch_sharded(params, state0, reqs,
-                                          policy=policy, num_devices=1),
+                                          policy=policy, num_devices=1,
+                                          outage=outage_arr),
         "sharded-chunked": mr.route_batch_sharded(params, state0, reqs,
                                                   policy=policy, chunk=chunk,
-                                                  num_devices=1),
+                                                  num_devices=1,
+                                                  outage=outage_arr),
     }
     resident = np.asarray(st_scan.resident)
     for name, (st, out) in runs.items():
         np.testing.assert_array_equal(np.asarray(out.choice),
                                       np.asarray(out_scan.choice),
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(out.cause),
+                                      np.asarray(out_scan.cause),
                                       err_msg=name)
         np.testing.assert_array_equal(np.asarray(out.hit),
                                       np.asarray(out_scan.hit), err_msg=name)
@@ -121,12 +159,21 @@ def check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk):
                                        rtol=1e-5, err_msg=name)
 
     if policy in _ORACLE_POLICIES:
-        router = ModelAwareRouter(copy.deepcopy(fleet), CATALOG,
-                                  policy=policy)
-        sc_choice = [
-            router.route(Request(int(m), float(b), int(t), cell=int(c),
-                                 arrival_s=float(a)))[0]
-            for m, b, t, c, a in zip(models, bits, toks, cells, arrivals)
-        ]
+        oracle_fleet = copy.deepcopy(fleet)
+        if out_mask is not None:
+            for srv, down in zip(oracle_fleet, out_mask):
+                srv.outaged = bool(down)
+        router = ModelAwareRouter(oracle_fleet, CATALOG, policy=policy,
+                                  spill=adj)
+        sc_choice, sc_cause = [], []
+        for i, (m, b, t, c, a) in enumerate(
+                zip(models, bits, toks, cells, arrivals)):
+            sc_choice.append(router.route(Request(
+                int(m), float(b), int(t), cell=int(c), arrival_s=float(a),
+                deadline_s=None if dl is None else float(dl[i]),
+            ))[0])
+            sc_cause.append(router.last_cause)
         np.testing.assert_array_equal(np.asarray(out_scan.choice),
                                       np.array(sc_choice))
+        np.testing.assert_array_equal(np.asarray(out_scan.cause),
+                                      np.array(sc_cause))

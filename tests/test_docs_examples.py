@@ -17,6 +17,7 @@ README = (REPO / "README.md").read_text()
 SERVING = (REPO / "docs" / "serving.md").read_text()
 SCENARIOS = (REPO / "docs" / "scenarios.md").read_text()
 SHARDING = (REPO / "docs" / "sharding.md").read_text()
+ROBUSTNESS = (REPO / "docs" / "robustness.md").read_text()
 EXAMPLES = sorted((REPO / "examples").glob("*.py"))
 
 
@@ -163,6 +164,40 @@ def test_sharding_md_python_snippets_compile():
 def test_readme_links_sharding_guide():
     assert "docs/sharding.md" in re.findall(r"\]\(([^)#`\s]+)\)", README), \
         "README no longer links the sharding guide"
+
+
+def test_robustness_md_quotes_real_commands():
+    """The robustness guide stays pinned like the others: quoted
+    scripts/modules must exist and it must keep covering the degraded
+    suite, its CI smoke form and the SLO scenario serve."""
+    _assert_commands_resolve(
+        ROBUSTNESS, "docs/robustness.md",
+        ("benchmarks.degraded_suite", "repro.launch.serve",
+         "--only degraded_suite --smoke", "--scenario slo-mix"),
+    )
+
+
+def test_robustness_md_python_snippets_compile():
+    blocks = re.findall(r"```python\n(.*?)```", ROBUSTNESS, re.S)
+    assert blocks, "robustness.md lost its python walkthrough"
+    for block in blocks:
+        compile(block, "robustness.md", "exec")
+        for mod in re.findall(r"^\s*(?:from|import)\s+(repro[\w.]*)",
+                              block, re.M):
+            assert importlib.util.find_spec(mod) is not None, \
+                f"robustness.md snippet imports unresolvable {mod}"
+
+
+def test_readme_links_robustness_guide():
+    assert "docs/robustness.md" in re.findall(r"\]\(([^)#`\s]+)\)", README), \
+        "README no longer links the robustness guide"
+
+
+def test_ci_covers_degraded_smoke():
+    """CI keeps the degraded-service smoke: one tiny fault-injected
+    episode asserting admission AND outage rejections end to end."""
+    ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    assert "--only degraded_suite --smoke" in ci
 
 
 def test_ci_covers_mesh_tier():

@@ -336,3 +336,23 @@ def test_router_paths_agree_seeded(seed, n_cells, per_cell, cloud, policy,
     from fuzz_paths import check_router_paths_agree
 
     check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk)
+
+
+@pytest.mark.parametrize(
+    "seed,n_cells,per_cell,cloud,policy,chunk,deadline,spill,outage", [
+        (1101, 3, 2, False, "greedy", 16, True, False, False),
+        (1102, 2, 2, False, "drain", 16, False, True, False),
+        (1103, 3, 1, False, "greedy", 48, False, False, True),
+        (1104, 4, 2, False, "drain", 16, True, True, True),
+        (1105, 2, 3, True, "load", 48, True, False, True),
+    ])
+def test_router_paths_agree_robustness_seeded(seed, n_cells, per_cell, cloud,
+                                              policy, chunk, deadline, spill,
+                                              outage):
+    """Seed-pinned twin of the hypothesis sweep's robustness knobs: SLO
+    deadline column, neighbour-cell spill adjacency and server-outage
+    mask through every router path, rejection causes included."""
+    from fuzz_paths import check_router_paths_agree
+
+    check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk,
+                             deadline=deadline, spill=spill, outage=outage)

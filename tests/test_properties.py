@@ -96,17 +96,24 @@ def test_ssd_chunked_equals_recurrent(s, h, seed):
     cloud=st.booleans(),
     policy=st.sampled_from(["greedy", "load", "drain"]),
     chunk=st.sampled_from([16, 48]),
+    deadline=st.booleans(),
+    spill=st.booleans(),
+    outage=st.booleans(),
 )
 @settings(max_examples=8, deadline=None)
 def test_all_router_paths_agree(seed, n_cells, per_cell, cloud, policy,
-                                chunk):
-    """Random fleets/streams/policies: scan, chunked, speculative and
-    mesh-sharded ``route_batch`` agree with each other (sharded bitwise)
-    and with the scalar oracle. The same driver runs seed-pinned in
-    ``test_mesh_router.py`` for hypothesis-free environments."""
+                                chunk, deadline, spill, outage):
+    """Random fleets/streams/policies — optionally under a mixed-SLO
+    deadline column, a random neighbour-cell spill adjacency and a
+    random server-outage mask: scan, chunked, speculative and
+    mesh-sharded ``route_batch`` agree with each other (sharded
+    bitwise, rejection causes included) and with the scalar oracle. The
+    same driver runs seed-pinned in ``test_mesh_router.py`` for
+    hypothesis-free environments."""
     from fuzz_paths import check_router_paths_agree
 
-    check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk)
+    check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk,
+                             deadline=deadline, spill=spill, outage=outage)
 
 
 @given(

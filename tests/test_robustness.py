@@ -1,0 +1,317 @@
+"""Overload economy + fault injection (docs/robustness.md).
+
+SLO admission control (``deadline_s`` / CAUSE_ADMISSION), neighbour-cell
+spill (the (C, C) adjacency at a backhaul surcharge), server outages
+(``outage`` masks / ``EdgeServer.outaged`` / CAUSE_OUTAGE) and the
+``FaultSpec`` fault schedules through ``workloads.simulate`` — at the
+scalar-oracle, batched and episode levels, including the acceptance
+bound: under ``flash-crowd-outage`` the SLO keeps the peak edge queue
+p90 within 5x of steady state. Cross-path equivalence of the same knobs
+is fuzzed in ``fuzz_paths.py`` / ``test_properties.py``.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import batch_router as br
+from repro.core.catalog import build_catalog
+from repro.core.router import (
+    CAUSE_ADMISSION, CAUSE_COMPLETED, CAUSE_INFEASIBLE, CAUSE_OUTAGE,
+    EdgeServer, ModelAwareRouter, Request,
+)
+from repro.workloads import (FaultSpec, compile_scenario, get_scenario,
+                             list_scenarios, simulate)
+from repro.workloads import generators as gen
+
+CATALOG = build_catalog(
+    ["smollm_135m", "starcoder2_3b", "mamba2_2p7b", "musicgen_medium"]
+)
+
+
+def _server(name="es0", cell=0, resident=(0, 1), drain_rate=0.0):
+    return EdgeServer(name=name, flops_per_s=1e14, cache_slots=2,
+                      uplink_bps=1e8, backhaul_bps=1e9,
+                      resident=list(resident), cell=cell,
+                      drain_rate=drain_rate)
+
+
+# ---------------------------------------------------------------------------
+# scalar oracle
+# ---------------------------------------------------------------------------
+def test_oracle_admission_rejects_and_leaves_fleet_untouched():
+    r = ModelAwareRouter([_server(), _server("es1")], CATALOG)
+    # model 2 is nowhere resident: the eq. 7 switch makes any deadline
+    # in the microsecond range unmeetable
+    choice, lat = r.route(Request(2, 1e6, 16, cell=0, deadline_s=1e-6))
+    assert choice == -1 and np.isinf(lat)
+    assert r.last_cause == CAUSE_ADMISSION
+    for s in r.servers:  # a rejection must not commit anything
+        assert s.queue_tokens == 0.0
+        assert s.resident == [0, 1]
+    # the same request with no SLO (or a loose one) routes fine
+    choice, lat = r.route(Request(2, 1e6, 16, cell=0))
+    assert choice >= 0 and np.isfinite(lat)
+    assert r.last_cause == CAUSE_COMPLETED
+
+
+def test_oracle_outage_masks_column_and_freezes_queue():
+    fleet = [_server(drain_rate=1e3), _server("es1", drain_rate=1e3)]
+    fleet[0].outaged = True
+    fleet[0].queue_tokens = 100.0
+    r = ModelAwareRouter(fleet, CATALOG)
+    choice, _ = r.route(Request(0, 1e5, 8, cell=0, arrival_s=1.0))
+    assert choice == 1                       # outaged column never wins
+    assert fleet[0].queue_tokens == 100.0    # frozen, not drained
+    assert fleet[1].queue_tokens > 0.0       # the survivor committed
+    fleet[1].outaged = True
+    choice, lat = r.route(Request(0, 1e5, 8, cell=0, arrival_s=1.1))
+    assert choice == -1 and r.last_cause == CAUSE_OUTAGE
+    # an empty cell is INFEASIBLE, not an outage
+    r.route(Request(0, 1e5, 8, cell=7, arrival_s=1.2))
+    assert r.last_cause == CAUSE_INFEASIBLE
+
+
+def test_oracle_spill_visibility_and_surcharge():
+    adj = np.zeros((2, 2), bool)
+    adj[0, 1] = True  # one-way: cell 0 may spill into cell 1
+    r = ModelAwareRouter([_server("c0", cell=0), _server("c1", cell=1)],
+                         CATALOG, spill=adj)
+    req = Request(0, 1e6, 8, cell=0)
+    assert r._visible(r.servers[1], req)
+    assert not r._visible(r.servers[0], Request(0, 1e6, 8, cell=1))
+    # identical hardware: the spilled candidate costs exactly the home
+    # price plus the prompt's trip over the inter-cell backhaul
+    home = r._candidate_latency(r.servers[0], req)
+    spilled = r._candidate_latency(r.servers[1], req)
+    np.testing.assert_allclose(spilled, home + 1e6 / 1e9, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# batched paths
+# ---------------------------------------------------------------------------
+def _batch(n=24, seed=0, deadline_s=None):
+    rng = np.random.default_rng(seed)
+    return br.RequestBatch(
+        model=jnp.asarray(rng.integers(0, len(CATALOG), n), jnp.int32),
+        prompt_bits=jnp.asarray(rng.uniform(1e5, 1e6, n), jnp.float32),
+        gen_tokens=jnp.asarray(rng.integers(1, 64, n), jnp.float32),
+        deadline_s=(None if deadline_s is None
+                    else jnp.asarray(deadline_s, jnp.float32)),
+    )
+
+
+def test_batch_deadline_absent_and_inf_are_equivalent():
+    params, state0 = br.fleet_from_servers(
+        [_server(), _server("es1", resident=(2, 3))], CATALOG)
+    st_none, out_none = br.route_batch(params, state0, _batch())
+    st_inf, out_inf = br.route_batch(
+        params, state0, _batch(deadline_s=np.full(24, np.inf)))
+    np.testing.assert_array_equal(np.asarray(out_none.choice),
+                                  np.asarray(out_inf.choice))
+    np.testing.assert_array_equal(np.asarray(out_none.cause),
+                                  np.asarray(out_inf.cause))
+    assert (np.asarray(out_none.cause) == CAUSE_COMPLETED).all()
+    np.testing.assert_array_equal(np.asarray(st_none.queue_tokens),
+                                  np.asarray(st_inf.queue_tokens))
+
+
+def test_batch_zero_deadline_rejects_everything_as_admission():
+    params, state0 = br.fleet_from_servers([_server()], CATALOG)
+    st, out = br.route_batch(params, state0,
+                             _batch(deadline_s=np.zeros(24)))
+    assert (np.asarray(out.choice) == -1).all()
+    assert (np.asarray(out.cause) == CAUSE_ADMISSION).all()
+    # nothing committed: the queue is untouched
+    np.testing.assert_array_equal(np.asarray(st.queue_tokens),
+                                  np.asarray(state0.queue_tokens))
+    s = br.stats(out)
+    assert s["completion_rate"] == 0.0 and s["admission_rate"] == 1.0
+
+
+def test_stats_per_cause_rates_sum_to_one():
+    params, state0 = br.fleet_from_servers([_server()], CATALOG)
+    dl = np.where(np.arange(24) % 3 == 0, 1e-6, np.inf)
+    _, out = br.route_batch(params, state0, _batch(deadline_s=dl))
+    s = br.stats(out)
+    total = (s["completion_rate"] + s["infeasible_rate"]
+             + s["admission_rate"] + s["outage_rate"])
+    assert total == pytest.approx(1.0)
+    assert 0.0 < s["admission_rate"] < 1.0
+
+
+def test_batch_outage_mask_excludes_server():
+    params, state0 = br.fleet_from_servers(
+        [_server(), _server("es1")], CATALOG)
+    outage = jnp.asarray(np.array([True, False]))
+    _, out = br.route_batch(params, state0, _batch(), outage=outage)
+    assert (np.asarray(out.choice) == 1).all()
+    _, out = br.route_batch(params, state0, _batch(),
+                            outage=jnp.asarray(np.array([True, True])))
+    assert (np.asarray(out.cause) == CAUSE_OUTAGE).all()
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec + simulate
+# ---------------------------------------------------------------------------
+def _stream(n=64, span_s=0.1, seed=1):
+    rng = np.random.default_rng(seed)
+    return br.RequestBatch(
+        model=jnp.asarray(rng.integers(0, len(CATALOG), n), jnp.int32),
+        prompt_bits=jnp.asarray(rng.uniform(1e5, 1e6, n), jnp.float32),
+        gen_tokens=jnp.asarray(rng.integers(8, 64, n), jnp.float32),
+        arrival_s=jnp.asarray(np.linspace(0.0, span_s, n), jnp.float32),
+    )
+
+
+def test_faultspec_validation():
+    params, state0 = br.fleet_from_servers(
+        [_server(drain_rate=1e3), _server("es1", drain_rate=1e3)], CATALOG)
+    with pytest.raises(ValueError, match="2 servers"):
+        simulate(params, state0, _stream(),
+                 faults=FaultSpec(outages=((5, 0.0, 1.0),)))
+    no_clock = _stream()._replace(arrival_s=None)
+    with pytest.raises(ValueError, match="arrival"):
+        simulate(params, state0, no_clock,
+                 faults=FaultSpec(outages=((0, 0.0, 1.0),)))
+    with pytest.raises(ValueError, match="drain"):
+        simulate(params._replace(drain_rate=None), state0, _stream(),
+                 faults=FaultSpec(drain_outages=((0, 0.0, 1.0),)))
+    # an empty FaultSpec is a no-op, not an error
+    simulate(params, state0, _stream(), faults=FaultSpec(),
+             window_requests=32)
+
+
+def test_simulate_outage_windows_mask_the_down_server():
+    params, state0 = br.fleet_from_servers(
+        [_server(), _server("es1")], CATALOG)
+    reqs = _stream(n=64, span_s=1.0)
+    faults = FaultSpec(outages=((0, 0.5, 2.0),))
+    _, out, series = simulate(params, state0, reqs, window_requests=16,
+                              faults=faults)
+    choice = np.asarray(out.choice)
+    arr = np.asarray(reqs.arrival_s)
+    # windows are masked by their FIRST arrival: every window starting
+    # inside the fault window routes around server 0 entirely
+    win_start = arr[::16]
+    for w, t0 in enumerate(win_start):
+        picks = choice[16 * w:16 * (w + 1)]
+        if t0 >= 0.5:
+            assert (picks == 1).all()
+    assert (choice[:16] == 0).any()       # before the fault: 0 still wins
+    assert (series.completion_rate == 1.0).all()  # the survivor absorbs all
+
+
+def test_simulate_drain_outage_stalls_backlog():
+    fleet = [_server(drain_rate=1e3), _server("es1", drain_rate=1e3)]
+    params, state0 = br.fleet_from_servers(fleet, CATALOG)
+    reqs = _stream(n=64, span_s=0.1)
+    st_ok, out_ok, _ = simulate(params, state0, reqs, window_requests=16)
+    st_stall, out_stall, _ = simulate(
+        params, state0, reqs, window_requests=16,
+        faults=FaultSpec(drain_outages=((0, 0.0, 1.0), (1, 0.0, 1.0))))
+    # a drain stall never rejects — the backlog just stops moving
+    assert (np.asarray(out_stall.choice) >= 0).all()
+    assert (np.asarray(st_stall.queue_tokens).sum()
+            > np.asarray(st_ok.queue_tokens).sum())
+
+
+# ---------------------------------------------------------------------------
+# scenario registry + generators
+# ---------------------------------------------------------------------------
+def test_degraded_family_registered():
+    names = set(list_scenarios())
+    assert {"slo-mix", "flash-crowd-outage", "drain-outage"} <= names
+    fco = get_scenario("flash-crowd-outage")
+    assert fco.faults.outages and fco.deadline_mix
+    assert not get_scenario("drain-outage").deadline_mix
+
+
+def test_slo_mix_stream_is_prefix_stable_with_steady():
+    """The deadline rng child is LAST in the spawn order: adding the SLO
+    column must not reshuffle any pre-existing column of the stream."""
+    steady = compile_scenario(get_scenario("steady"), seed=3,
+                              num_models=6, num_cells=2)
+    slo = compile_scenario(get_scenario("slo-mix"), seed=3,
+                           num_models=6, num_cells=2)
+    np.testing.assert_array_equal(np.asarray(steady.model),
+                                  np.asarray(slo.model))
+    np.testing.assert_array_equal(np.asarray(steady.prompt_bits),
+                                  np.asarray(slo.prompt_bits))
+    assert steady.deadline_s is None
+    dl = np.asarray(slo.deadline_s)
+    assert set(np.unique(dl)) <= {np.float32(0.1), np.float32(1.0),
+                                  np.float32(np.inf)}
+
+
+def test_sample_deadlines_empty_mix_is_none():
+    rng = np.random.default_rng(0)
+    assert gen.sample_deadlines(rng, 10, ()) is None
+    dl = gen.sample_deadlines(rng, 1000, ((0.5, 1.0),))
+    assert (dl == 0.5).all()
+
+
+# ---------------------------------------------------------------------------
+# serve.py CLI validation
+# ---------------------------------------------------------------------------
+def test_serve_actor_flag_friendly_errors(tmp_path):
+    from repro.launch.serve import resolve_policy_flag
+
+    with pytest.raises(SystemExit, match="no actor checkpoint"):
+        resolve_policy_flag(f"actor:{tmp_path / 'missing'}", None)
+    corrupt = tmp_path / "ckpt" / "step_0"
+    corrupt.mkdir(parents=True)
+    (corrupt / "manifest.json").write_text("{not json")
+    with pytest.raises(SystemExit, match="could not restore"):
+        resolve_policy_flag(f"actor:{tmp_path / 'ckpt'}", None)
+    with pytest.raises(SystemExit, match="needs a checkpoint directory"):
+        resolve_policy_flag("actor:", None)
+    assert resolve_policy_flag("greedy", None) == "greedy"
+
+
+def test_serve_mesh_flag_validated_against_devices():
+    from repro.launch.serve import validate_mesh_flag
+
+    validate_mesh_flag(None)
+    validate_mesh_flag(1)
+    with pytest.raises(SystemExit, match="local devices"):
+        validate_mesh_flag(10**6)
+    with pytest.raises(SystemExit):
+        validate_mesh_flag(0)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance bound (the overload-economy headline)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_flash_crowd_outage_slo_bounds_queue_p90():
+    """Under the 20x spike + whole-cell outage, SLO admission keeps the
+    peak edge queue p90 within 5x of steady state — and the no-SLO
+    control on the same stream shows the blow-up it prevents. Mirrors
+    ``benchmarks/degraded_suite.py`` (same fleet template)."""
+    from repro.launch.serve import make_multicell_fleet
+
+    archs = ["smollm_135m", "starcoder2_3b", "mamba2_2p7b",
+             "musicgen_medium", "zamba2_7b", "qwen3_32b"]
+    catalog = build_catalog(archs)
+    fleet = make_multicell_fleet(2, 2, catalog, slots=2, drain_rate=3e4,
+                                 cloud=False)
+    params, state0 = br.fleet_from_servers(fleet, catalog)
+
+    def episode(spec):
+        reqs = compile_scenario(spec, seed=0, num_models=len(archs),
+                                num_cells=2)
+        return simulate(params, state0, reqs, window_requests=256,
+                        faults=spec.faults)
+
+    _, _, steady = episode(get_scenario("steady"))
+    bound = 5.0 * float(steady.queue_p90[-1])
+
+    spec = get_scenario("flash-crowd-outage")
+    _, out, series = episode(spec)
+    cause = np.asarray(out.cause)
+    assert (cause == CAUSE_ADMISSION).any()
+    assert (cause == CAUSE_OUTAGE).any()
+    assert float(series.queue_p90.max()) <= bound
+
+    _, _, control = episode(spec._replace(deadline_mix=()))
+    assert float(control.queue_p90.max()) > bound

@@ -81,6 +81,36 @@ def test_kernel_cell_mask_inf_exact(b, n, k, cells):
     np.testing.assert_allclose(got[visible], expect[visible], rtol=1e-6)
 
 
+@pytest.mark.parametrize("b,n,k,cells", [(41, 11, 4, 3), (130, 33, 5, 4)])
+def test_kernel_spill_adjacency_matches_reference(b, n, k, cells):
+    """Neighbour-cell spill: the (C, C) adjacency opens exactly the
+    spilled pairs, priced at the no-mask score plus the backhaul
+    surcharge, identically in the kernel and the XLA reference."""
+    rng = np.random.default_rng(23)
+    args = _random_case(rng, b, n, k, jnp.float32, cells=cells)
+    adj = rng.random((cells, cells)) < 0.5
+    np.fill_diagonal(adj, False)
+    args["spill"] = jnp.asarray(adj)
+    expect = np.asarray(ref.route_score_xla(**args))
+    got = np.asarray(route_score(**args, interpret=True))
+    np.testing.assert_array_equal(np.isinf(got), np.isinf(expect))
+    fin = np.isfinite(expect)
+    np.testing.assert_allclose(got[fin], expect[fin], rtol=1e-6)
+    # the adjacency strictly widens the no-spill visibility...
+    no_spill = np.asarray(
+        ref.route_score_xla(**{**args, "spill": None}))
+    widened = fin & ~np.isfinite(no_spill)
+    assert widened.any()
+    # ...and every widened pair pays prompt_bits/backhaul on top of the
+    # unmasked eq. 11 score
+    unmasked = np.asarray(ref.route_score_xla(
+        **{**args, "spill": None, "req_cell": None, "srv_cell": None}))
+    surcharge = (np.asarray(args["prompt_bits"])[:, None]
+                 / np.asarray(args["backhaul_bps"])[None, :])
+    np.testing.assert_allclose(expect[widened],
+                               (unmasked + surcharge)[widened], rtol=1e-6)
+
+
 def test_kernel_switch_free_and_queue_free_base():
     """The chunked router's phase-1 variants: size_bits=None drops
     eq. 7 entirely, queue_tokens=None the backlog term."""
