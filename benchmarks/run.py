@@ -148,13 +148,21 @@ def bench_fleet_scale(smoke=False):
     fleet_scale.main(header=False, smoke=smoke)
 
 
-def bench_policy_serving():
+def bench_policy_serving(smoke=False):
     """Policy QUALITY (not req/s): greedy vs drain-aware vs a trained
-    MADDPG-MATO actor checkpoint on the same bursty multi-cell stream;
-    refreshes benchmarks/BENCH_policy.json. Trains a short-budget
-    checkpoint on first run (cached under benchmarks/results/)."""
+    MADDPG-MATO actor checkpoint — target-only AND the full eq. 16
+    action (eta/beta head columns) — on the same bursty multi-cell
+    stream; refreshes benchmarks/BENCH_policy.json. Trains a
+    short-budget checkpoint on first run (cached under
+    benchmarks/results/). With --smoke, a toy untrained actor asserts
+    the eta/beta columns are honoured end to end (bitwise no-op for
+    all-ones knobs, refusal zeroes download_rate); no training, no
+    timing, no BENCH JSON."""
     from benchmarks import policy_serving
 
+    if smoke:
+        policy_serving.smoke()
+        return
     policy_serving.main(header=False)
 
 

@@ -229,6 +229,21 @@ class RequestBatch(NamedTuple):
     #: eq. 11 score exceeds its deadline is rejected (admission control);
     #: ``+inf`` entries have no SLO, ``None`` compiles the check out.
     deadline_s: Optional[jnp.ndarray] = None
+    #: (B,) eq. 16 offload ratio in [0, 1]: the edge side transmits and
+    #: computes the ``eta`` fraction (eq. 5/9 scale), the device keeps
+    #: ``1 - eta`` (eq. 3, priced via ``local_flops_per_s``), and the
+    #: commit queues only ``eta * gen_tokens``. ``None`` compiles the
+    #: knob out — bit-identical to pricing every request at eta = 1.
+    eta: Optional[jnp.ndarray] = None
+    #: (B,) eq. 16 download decision: ``False`` refuses the eq. 7 model
+    #: fetch on a residency miss, so non-resident candidates price
+    #: ``+inf`` and a committed request is always a hit. ``None`` (or
+    #: ``True``) downloads on miss as before.
+    beta: Optional[jnp.ndarray] = None
+    #: (B,) requesting device's compute speed for the eq. 3 local share
+    #: under partial offload; ``None`` (or entries <= 0) prices the
+    #: local side at zero. Only read when ``eta`` is present.
+    local_flops_per_s: Optional[jnp.ndarray] = None
 
 
 class RouteOutcome(NamedTuple):
@@ -463,12 +478,15 @@ def local_block_params(params: FleetParams, layout: CellLayout,
 # ---------------------------------------------------------------------------
 # vectorised scoring
 # ---------------------------------------------------------------------------
-def _static_costs(params: FleetParams, reqs: RequestBatch):
+def _static_costs(params: FleetParams, reqs: RequestBatch, eta=None):
     """State-independent pieces of the eq. 11 score, one shot per batch:
     eq. 5 transmission (B, N), eq. 7 switch price (B, N) before the
-    residency gate, and per-request decode FLOPs/token (B,)."""
+    residency gate, and per-request decode FLOPs/token (B,). ``eta``
+    scales the transmitted prompt — ``(x * eta) / r`` is the IEEE
+    grouping of eq. 5's ``x eta / r``, so ``None`` is bitwise eta=1."""
+    prompt = reqs.prompt_bits if eta is None else reqs.prompt_bits * eta
     t_trans = costs.trans_latency(
-        reqs.prompt_bits[:, None], 1.0, params.uplink_bps[None, :]
+        prompt[:, None], 1.0, params.uplink_bps[None, :]
     )
     switch_price = costs.switch_latency(
         params.size_bits[reqs.model][:, None], params.backhaul_bps[None, :]
@@ -524,7 +542,10 @@ def score_matrix(params: FleetParams, state: FleetState, reqs: RequestBatch,
     ``"pallas-interpret"`` (the fused ``kernels/route_score.py`` tile
     kernel). ``None`` reads ``$REPRO_ROUTER_BACKEND``. Policy studies,
     admission control, and ``route_batch``'s chunked phase-1 all target
-    exactly this contraction."""
+    exactly this contraction. ``reqs.eta``/``reqs.beta`` ride through to
+    the backend (eq. 16 partial offload / download refusal); the matrix
+    stays EDGE-SIDE — the eq. 3 local share never enters the scores
+    (``max`` with it is monotone, so edge argmins are eq. 13 argmins)."""
     backend = resolve_backend(backend)
     flops_tok = params.decode_flops_per_token[reqs.model]
     has_cells = params.cell is not None and reqs.cell is not None
@@ -537,6 +558,7 @@ def score_matrix(params: FleetParams, state: FleetState, reqs: RequestBatch,
         req_cell=reqs.cell if has_cells else None,
         srv_cell=params.cell if has_cells else None,
         spill=params.spill if has_cells else None,
+        eta=reqs.eta, beta=reqs.beta,
         cloud_cell=CLOUD_CELL, backend=backend,
     )
 
@@ -763,6 +785,19 @@ def route_batch(
       * ``outage`` — (N,) bool fault mask: an outaged server's column
         scores ``+inf`` and its queue freezes (no drain) for this call.
 
+    Eq. 16 action knobs (likewise compiled out when absent — ``None``
+    stays bitwise today's path):
+      * ``reqs.eta`` — partial offload: the edge share (eq. 5
+        transmission, eq. 9 work, the committed queue tokens) scales by
+        ``eta``; the device's retained ``1 - eta`` share is priced by
+        ``reqs.local_flops_per_s`` (eq. 3) and enters the REPORTED
+        latency (eq. 13's max) and the SLO check, never the argmin.
+      * ``reqs.beta`` — download refusal: ``False`` rows price every
+        non-resident server at ``+inf`` (the eq. 7 fetch is refused),
+        so a refused request either lands on a resident server or is
+        rejected (CAUSE_ADMISSION) — a committed refusal is always a
+        residency hit and never mutates residency.
+
     ``outcome.cause`` labels every rejection (``rejection_cause``), so
     ``stats``/``window_stats`` can report honest per-cause rates.
 
@@ -827,6 +862,14 @@ def _route_core(params, state, reqs, drain_tokens, policy_fn, *, chunk,
     arrivals = reqs.arrival_s.astype(dtype) if has_time else None
     deadline = (reqs.deadline_s.astype(dtype)
                 if reqs.deadline_s is not None else None)
+    # eq. 16 knobs (compiled out when absent): eta scales the offloaded
+    # share, beta gates the eq. 7 download, local prices the eq. 3 side
+    eta = reqs.eta.astype(dtype) if reqs.eta is not None else None
+    beta = (jnp.asarray(reqs.beta).astype(bool)
+            if reqs.beta is not None else None)
+    local = (reqs.local_flops_per_s.astype(dtype)
+             if eta is not None and reqs.local_flops_per_s is not None
+             else None)
     time0 = state.time_s if state.time_s is not None else 0.0
     carry = (state.resident, state.last_use,
              state.queue_tokens.astype(dtype), state.clock,
@@ -836,12 +879,13 @@ def _route_core(params, state, reqs, drain_tokens, policy_fn, *, chunk,
         carry, outs = _scan_full(params, reqs, carry, policy_fn, dtype,
                                  gen_tokens, drain, drain_rate, arrivals,
                                  deadline, outage, has_cells, has_time,
-                                 unroll)
+                                 unroll, eta, beta, local)
     else:
         carry, outs = _scan_chunked(params, reqs, carry, policy_fn, dtype,
                                     gen_tokens, drain, drain_rate, arrivals,
                                     deadline, outage, has_cells, has_time,
-                                    chunk, unroll, backend, speculative)
+                                    chunk, unroll, backend, speculative,
+                                    eta, beta, local)
     resident, last_use, queue, clock, time_s = carry
     choice, latency, hit = outs
     new_state = FleetState(
@@ -856,7 +900,7 @@ def _route_core(params, state, reqs, drain_tokens, policy_fn, *, chunk,
 
 def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
                drain_rate, arrivals, deadline, outage, has_cells, has_time,
-               unroll):
+               unroll, eta=None, beta=None, local=None):
     """Single-scan path: full eq. 11 re-derivation per step (bit-exact
     latencies vs the scalar oracle — same term order, same rounding).
 
@@ -864,22 +908,41 @@ def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     are all state-independent, so they fold into the precomputed
     ``t_trans`` panel — masked pairs carry ``+inf`` and the scan body
     stays a pure add chain. The surcharge lands ON the eq. 5 term
-    before the eq. 7/9 adds, matching the oracle's term order bitwise."""
-    t_trans, switch_price, flops_tok = _static_costs(params, reqs)
+    before the eq. 7/9 adds, matching the oracle's term order bitwise.
+
+    Eq. 16 knobs: ``eta`` pre-scales the eq. 5/9 edge share (and the
+    commit queues ``eta * gen``); ``beta=False`` rows poison the eq. 7
+    switch price to ``+inf`` (a refused download can never win — and a
+    committed refusal is always a residency hit by construction);
+    ``local`` prices the device's retained ``1 - eta`` share (eq. 3),
+    which enters only the reported eq. 13 latency and the SLO check —
+    never the argmin (``max`` with a constant is monotone in the edge
+    score, so the edge argmin is already an eq. 13 argmin)."""
+    t_trans, switch_price, flops_tok = _static_costs(params, reqs, eta)
+    prompt_eff = (reqs.prompt_bits if eta is None
+                  else reqs.prompt_bits * eta)
     if has_cells and params.spill is not None:
         adj = _spill_adjacency(params, reqs)
         spilled = adj & (params.cell[None, :] != reqs.cell[:, None])
         t_trans = t_trans + jnp.where(
             spilled,
-            reqs.prompt_bits[:, None] / params.backhaul_bps[None, :], 0.0,
+            prompt_eff[:, None] / params.backhaul_bps[None, :], 0.0,
         )
     vis = cell_mask(params, reqs)
     if vis is not None:
         t_trans = jnp.where(vis, t_trans, jnp.inf)
     if outage is not None:
         t_trans = jnp.where(outage[None, :], jnp.inf, t_trans)
-    has_mask = vis is not None or outage is not None
+    if beta is not None:
+        switch_price = jnp.where(beta[:, None], switch_price, jnp.inf)
+    has_mask = vis is not None or outage is not None or beta is not None
     work = gen_tokens * flops_tok                               # (B,)
+    tloc = None
+    if eta is not None:
+        if local is not None:  # eq. 3 on the UNSCALED work; <= 0: no device
+            tloc = jnp.where(local > 0, ((1.0 - eta) * work) / local, 0.0)
+        work = work * eta
+    gen_eff = None if eta is None else gen_tokens * eta
     needs_ctx = getattr(policy_fn, "needs_ctx", False)
     prompt = reqs.prompt_bits if needs_ctx else None
     # the builtin argmins return indices in [0, N) by construction and
@@ -890,7 +953,7 @@ def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     def step(carry, xs):
         resident, last_use, queue, clock, time_s = carry
         (model, t_trans_b, switch_b, flops_tok_b, work_b, drain_b, gen_b,
-         cell_b, arrival_b, prompt_b, dl_b) = xs
+         cell_b, arrival_b, prompt_b, dl_b, gen_eff_b, tloc_b) = xs
 
         if has_time:  # wall-clock queue decay since the last arrival
             dt = jnp.maximum(arrival_b - time_s, 0.0)
@@ -932,7 +995,10 @@ def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             safe = jnp.clip(choice, 0, lats.shape[0] - 1)
             choice_ok = choice == safe
             if has_mask:
-                choice_ok &= jnp.isfinite(t_trans_b[safe])
+                # lats (not t_trans) finiteness: a beta-refused pick
+                # falls back to the resident-only argmin, like the
+                # oracle; pre-beta the two conditions are identical
+                choice_ok &= jnp.isfinite(lats[safe])
             choice = jnp.where(choice_ok, safe,
                                jnp.argmin(lats).astype(jnp.int32))
 
@@ -942,12 +1008,18 @@ def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
         # admission rejection never depends on which server was picked
         ok = jnp.isfinite(lats[choice]) if has_mask else None
         if dl_b is not None:
-            admit = jnp.min(lats) <= dl_b
+            best = jnp.min(lats)
+            if tloc_b is not None:  # eq. 13: the device share bounds below
+                best = jnp.maximum(tloc_b, best)
+            admit = best <= dl_b
             ok = admit if ok is None else ok & admit
         resident, last_use, queue, out = _commit(
-            params, resident, last_use, queue, clock, model, gen_b, choice,
+            params, resident, last_use, queue, clock, model,
+            gen_b if gen_eff_b is None else gen_eff_b, choice,
             lats, ok,
         )
+        if tloc_b is not None:  # reported latency is eq. 13's max
+            out = (out[0], jnp.maximum(tloc_b, out[1]), out[2])
         if drain_b is not None:  # None is static: compiled out of the scan
             d = (drain_b if outage is None
                  else jnp.where(outage, 0.0, drain_b))
@@ -956,7 +1028,7 @@ def _scan_full(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
 
     xs = (reqs.model, t_trans, switch_price, flops_tok, work, drain,
           gen_tokens, reqs.cell if has_cells else None, arrivals, prompt,
-          deadline)
+          deadline, gen_eff, tloc)
     return jax.lax.scan(step, carry, xs, unroll=unroll)
 
 
@@ -986,7 +1058,8 @@ def _static_argmin(col, k):
 
 def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
                   drain_rate, arrivals, deadline, outage, has_cells, has_time,
-                  chunk, unroll, backend, speculative=True):
+                  chunk, unroll, backend, speculative=True,
+                  eta=None, beta=None, local=None):
     """Two-phase commit: fused chunk scoring + slimmed correction scan,
     with the speculative parallel commit on top for the greedy policy
     (``speculative=True``; see the module docstring for the argument).
@@ -1029,6 +1102,28 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     flops_tok = params.decode_flops_per_token[model]
     size_bits = params.size_bits[model]
     work = gen * flops_tok
+    # eq. 16 knobs: eta pre-scales the edge share (prompt, work, and the
+    # committed gen — same IEEE grouping as the oracle), beta=False
+    # poisons the eq. 7 size to +inf (refused downloads never win), and
+    # `local` prices the device's eq. 3 share, entering only the
+    # reported eq. 13 latency and the SLO check — never the argmin
+    tloc = None
+    if eta is not None:
+        eta_p = pad1(eta)
+        if local is not None:
+            local_p = pad1(local)
+            tloc = jnp.where(local_p > 0,
+                             ((1.0 - eta_p) * work) / local_p, 0.0)
+        prompt_eff = prompt * eta_p
+        work = work * eta_p
+        gen_commit = gen * eta_p
+        praw, graw = prompt, gen  # policies still see the raw columns
+    else:
+        prompt_eff, gen_commit = prompt, gen
+        praw = graw = None
+    if beta is not None:
+        # pad1 pads False -> +inf size on pad rows; `valid` rejects them
+        size_bits = jnp.where(pad1(beta), size_bits, jnp.inf)
     cells = pad1(reqs.cell) if has_cells else None
     arrs = pad1(arrivals) if has_time else None
     drains = pad1(drain) if drain is not None else None
@@ -1037,8 +1132,9 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     # padded tail requests are inert: no commit, no clock/time advance
     valid = (jnp.arange(n_chunks * c) < b) if pad else None
     # visibility rides in `base` as +inf; the outage mask folds into the
-    # same channel, so every downstream finiteness check covers both
-    has_mask = has_cells or outage is not None
+    # same channel (and the beta-poisoned switch price reaches `lats`
+    # directly), so every downstream finiteness check covers all three
+    has_mask = has_cells or outage is not None or beta is not None
     needs_obs = getattr(policy_fn, "needs_obs", True)
     needs_ctx = getattr(policy_fn, "needs_ctx", False)
     # the builtin argmins can only land on an invisible server when the
@@ -1101,8 +1197,10 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     def step(carry, xs):
         lru, queue, clock, time_s = carry
         model_b, scal_b, drain_b, arrival_b, valid_b, dl_b, base_b, \
-            prompt_b, cell_b, aux_b = xs
+            prompt_b, cell_b, gctx_b, tloc_b, aux_b = xs
         gen_b, size_b, ftok_b = scal_b[0], scal_b[1], scal_b[2]
+        # scal_b[0] is the COMMITTED gen (eta-scaled); policies see raw
+        gen_ctx = gen_b if gctx_b is None else gctx_b
 
         if has_time:  # wall-clock residue: queue decay since last arrival
             dt = jnp.maximum(arrival_b - time_s, 0.0)
@@ -1144,7 +1242,7 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
         if needs_ctx:
             ctx = PolicyCtx(
                 params=params, model=model_b, prompt_bits=prompt_b,
-                gen_tokens=gen_b, flops_tok=ftok_b, resident=resident_m,
+                gen_tokens=gen_ctx, flops_tok=ftok_b, resident=resident_m,
                 queue=queue, cell=cell_b,
             )
             if aux_b is not None:
@@ -1171,14 +1269,21 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             safe = jnp.clip(choice, 0, n - 1)
             choice_ok = choice == safe
             if has_mask:
-                choice_ok &= jnp.isfinite(base_b[safe])
+                # lats (not base) finiteness: covers the beta-poisoned
+                # switch residue too; pre-beta identical to base's
+                choice_ok &= jnp.isfinite(lats[safe])
             choice = jnp.where(choice_ok, safe,
                                jnp.argmin(lats).astype(jnp.int32))
 
         lat_b = lats[choice]
+        if tloc_b is not None:  # reported latency is eq. 13's max
+            lat_b = jnp.maximum(tloc_b, lat_b)
         ok = jnp.isfinite(lat_b) if has_mask else None
         if dl_b is not None:  # SLO admission: best score vs deadline
-            admit = jnp.min(lats) <= dl_b
+            best = jnp.min(lats)
+            if tloc_b is not None:
+                best = jnp.maximum(tloc_b, best)
+            admit = best <= dl_b
             ok = admit if ok is None else ok & admit
         if valid_b is not None:
             ok = valid_b if ok is None else ok & valid_b
@@ -1202,7 +1307,7 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
 
     def chunk_step(carry, xs):
         model_c, scal_c, prompt_c, work_c, drain_c, cell_c, arr_c, \
-            valid_c, dl_c = xs
+            valid_c, dl_c, praw_c, graw_c, tloc_c = xs
         # phase 1 — ONE fused kernel call scores the whole chunk: the
         # switch-free base (eq. 5 + zero-backlog eq. 9) with the cell
         # mask (incl. spill surcharge) folded in as +inf. Everything
@@ -1222,9 +1327,11 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             base = jnp.where(outage[None, :], jnp.inf, base)
 
         def inner_xs(aux):
+            prompt_ctx = prompt_c if praw_c is None else praw_c
             return (model_c, scal_c, drain_c, arr_c, valid_c, dl_c, base,
-                    prompt_c if needs_ctx else None,
-                    cell_c if needs_ctx and has_cells else None, aux)
+                    prompt_ctx if needs_ctx else None,
+                    cell_c if needs_ctx and has_cells else None,
+                    graw_c if needs_ctx else None, tloc_c, aux)
 
         if not has_hook:
             return jax.lax.scan(step, carry, inner_xs(None),
@@ -1239,8 +1346,11 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
         # while a chunk that never drifts past the precomputed variants
         # pays only one predicate for the whole chunk.
         cctx = ChunkPolicyCtx(
-            params=params, model=model_c, prompt_bits=prompt_c,
-            gen_tokens=scal_c[:, 0], flops_tok=scal_c[:, 2],
+            params=params,
+            model=model_c,
+            prompt_bits=prompt_c if praw_c is None else praw_c,
+            gen_tokens=scal_c[:, 0] if graw_c is None else graw_c,
+            flops_tok=scal_c[:, 2],
             resident=(carry[0][:num_k] < _LRU_FREE).T,
             cell=cell_c if has_cells else None,
         )
@@ -1261,7 +1371,7 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
     def spec_chunk_step(carry, xs):
         lru, queue, clock, time_s = carry
         model_c, scal_c, prompt_c, work_c, drain_c, cell_c, arr_c, \
-            valid_c, dl_c = xs
+            valid_c, dl_c, praw_c, graw_c, tloc_c = xs
         gen_c, size_c, ftok_c = scal_c[:, 0], scal_c[:, 1], scal_c[:, 2]
         idx_c = jnp.arange(c, dtype=jnp.int32)
 
@@ -1287,7 +1397,8 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
 
         def spec_step(carry, xs_b):
             queue, time_s = carry
-            basez_b, ftok_b, gen_b, drain_b, arrival_b, valid_b, dl_b = xs_b
+            basez_b, ftok_b, gen_b, drain_b, arrival_b, valid_b, dl_b, \
+                tloc_b = xs_b
             if has_time:
                 dt = jnp.maximum(arrival_b - time_s, 0.0)
                 if valid_b is not None:
@@ -1309,7 +1420,10 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
                 touch_n &= jnp.isfinite(basez_b[choice])
             if dl_b is not None:
                 # greedy: lats[choice] IS the best score — the SLO check
-                touch_n &= lats[choice] <= dl_b
+                best = lats[choice]
+                if tloc_b is not None:  # eq. 13 device-share floor
+                    best = jnp.maximum(tloc_b, best)
+                touch_n &= best <= dl_b
             if valid_b is not None:
                 touch_n &= valid_b
             queue = queue + jnp.where(touch_n, gen_b, 0.0)
@@ -1322,7 +1436,7 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             out = (choice, queue) + ((time_s,) if has_time else ())
             return (queue, time_s), out
 
-        inner = (basez, ftok_c, gen_c, drain_c, arr_c, valid_c, dl_c)
+        inner = (basez, ftok_c, gen_c, drain_c, arr_c, valid_c, dl_c, tloc_c)
         _, souts = jax.lax.scan(spec_step, (queue, time_s), inner,
                                 unroll=min(unroll, c))
         choices = souts[0]
@@ -1343,6 +1457,8 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             params.flops_per_s[None, :]
         col = choices[:, None]
         lat = jnp.take_along_axis(lats_full, col, axis=1)[:, 0]
+        if tloc_c is not None:  # eq. 13: reported latency and SLO floor
+            lat = jnp.maximum(tloc_c, lat)
         hits = jnp.take_along_axis(hitrow, col, axis=1)[:, 0]
         ok = jnp.isfinite(lat) if has_mask else jnp.ones((c,), bool)
         if dl_c is not None:  # re-derived `lat` is bitwise the scan's
@@ -1404,6 +1520,8 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
             ) + (queue * ftok_c[i]) / params.flops_per_s
             choice = jnp.argmin(lats).astype(jnp.int32)
             lat_b = lats[choice]
+            if tloc_c is not None:  # eq. 13 max, matching the scan body
+                lat_b = jnp.maximum(tloc_c[i], lat_b)
             ok_b = jnp.isfinite(lat_b) if has_mask else None
             if dl_c is not None:  # greedy: lats[choice] == min(lats)
                 admit = lat_b <= dl_c[i]
@@ -1431,10 +1549,13 @@ def _scan_chunked(params, reqs, carry, policy_fn, dtype, gen_tokens, drain,
         )
         return (lru, queue, clock, time_s), (och, olat, ohit)
 
-    # (c, 3) strip of per-request scalars: one xs slice per step
-    scalars = jnp.stack([gen, size_bits, flops_tok], axis=1)
-    xs = tuple(map(chunks, (model, scalars, prompt, work,
-                            drains, cells, arrs, valid, dls)))
+    # (c, 3) strip of per-request scalars: one xs slice per step.
+    # Column 0 is the COMMITTED gen (eta-scaled when the knob is set);
+    # the raw columns ride separately for policy ctx only.
+    scalars = jnp.stack([gen_commit, size_bits, flops_tok], axis=1)
+    xs = tuple(map(chunks, (model, scalars, prompt_eff, work,
+                            drains, cells, arrs, valid, dls,
+                            praw, graw, tloc)))
     carry, outs = jax.lax.scan(spec_chunk_step if use_spec else chunk_step,
                                carry, xs)
     lru, queue, clock, time_s = carry
@@ -1468,7 +1589,13 @@ def stats(outcome: RouteOutcome, *, cloud_index: Optional[int] = None) -> dict:
     the router, so counting them in the mean would deflate the hit rate
     exactly in the rejection-heavy scenarios where it matters — it is
     the hit fraction OVER COMPLETED requests (``nan`` when none
-    complete). ``cloud_index`` — the cloud column's server index
+    complete). ``download_rate`` is its complement over the same
+    denominator — the fraction of completed requests whose commit
+    fetched the model over the backhaul (an eq. 7/8 download; under
+    ``beta=False`` refusal it is structurally 0, since a committed
+    refusal is always a residency hit), so ``residency_hit_rate +
+    download_rate == 1`` whenever any request completes.
+    ``cloud_index`` — the cloud column's server index
     (conventionally the last) — adds the ``cloud_fallback_rate``, so
     call sites stop re-deriving it from raw choices.
 
@@ -1489,9 +1616,15 @@ def stats(outcome: RouteOutcome, *, cloud_index: Optional[int] = None) -> dict:
         (outcome.hit & ok).sum() / n_ok,
         jnp.nan,
     )
+    dl_rate = jnp.where(
+        ok.any(),
+        (ok & ~outcome.hit).sum() / n_ok,
+        jnp.nan,
+    )
     out = {
         "mean_latency": float(mean_lat),
         "residency_hit_rate": float(hit_rate),
+        "download_rate": float(dl_rate),
         "completion_rate": float(ok.mean()),
     }
     if cloud_index is not None:
@@ -1546,6 +1679,10 @@ def window_stats(outcome: RouteOutcome, window_id, num_windows: int, *,
         "mean_latency": np.where(n_ok > 0, lat_sum / denom_ok, np.inf),
         "completion_rate": n_ok / denom,
         "residency_hit_rate": np.where(n_ok > 0, hits / denom_ok, np.nan),
+        # complement of the hit rate over completed requests: commits
+        # that fetched the model over the backhaul (eq. 7/8 downloads)
+        "download_rate": np.where(n_ok > 0, (n_ok - hits) / denom_ok,
+                                  np.nan),
     }
     if cloud_index is not None:
         out["cloud_fallback_rate"] = np.bincount(

@@ -67,7 +67,8 @@ def edge_total_latency(t_trans, t_switch, t_comp):
 
 def edge_score_matrix(prompt_bits, size_bits, flops_tok, work,
                       uplink_bps, backhaul_bps, flops_per_s,
-                      queue_tokens=None, resident=None):
+                      queue_tokens=None, resident=None, eta=None,
+                      beta=None):
     """Vectorised eq. 11 over ALL request x server pairs: the (B, N) score.
 
     Per-request columns (B,): ``prompt_bits``, ``size_bits`` (the tagged
@@ -86,7 +87,20 @@ def edge_score_matrix(prompt_bits, size_bits, flops_tok, work,
     single home of the eq. 5 + 7 + 9 arithmetic: the XLA scoring path,
     the Pallas kernel oracle and the batched router all call it (or
     reproduce it term for term).
+
+    ``eta`` (B,) is the eq. 16 offload ratio: the edge side only
+    transmits and computes the offloaded fraction, so it scales
+    ``prompt_bits`` (eq. 5) and ``work`` (eq. 9) — the eq. 3 local
+    remainder ``(1-eta)`` lives with the caller (it is per-request, not
+    per-pair). ``beta`` (B,) is the download decision: ``False`` refuses
+    the eq. 7 model fetch, pricing every non-resident pair at ``+inf``
+    (resident pairs are untouched — there is nothing to download).
+    ``eta=None`` / ``beta=None`` compile the knobs out bit-identically
+    (eta=None prices like eta=1, today's full-offload serving).
     """
+    prompt_bits, size_bits, work = apply_eta_beta(
+        prompt_bits, size_bits, work, eta, beta
+    )
     t_trans = trans_latency(prompt_bits[:, None], 1.0, uplink_bps[None, :])
     if queue_tokens is None:
         backlog = work[:, None]
@@ -99,6 +113,32 @@ def edge_score_matrix(prompt_bits, size_bits, flops_tok, work,
     if resident is not None:
         t_switch = jnp.where(resident, 0.0, t_switch)
     return edge_total_latency(t_trans, t_switch, t_comp)
+
+
+def apply_eta_beta(prompt_bits, size_bits, work, eta, beta):
+    """Fold the eq. 16 ``(eta, beta)`` knobs into the eq. 5/7/9 inputs.
+
+    Returns ``(prompt_bits, size_bits, work)`` with ``eta`` scaling the
+    transmitted bits and offloaded work (``x * eta / r`` groups as
+    ``(x * eta) / r`` in IEEE order, so pre-scaling is bit-identical to
+    scaling inside eq. 5/9) and ``beta=False`` poisoning the model size
+    to ``+inf`` — the eq. 7 switch price becomes ``+inf`` on every
+    non-resident pair while the residency gate still zeroes it on hits.
+    Shared by the XLA reference, the Pallas kernel wrapper and the
+    batched router so all backends transform identically.
+    """
+    if eta is not None:
+        prompt_bits = prompt_bits * eta
+        work = work * eta
+    if beta is not None:
+        if size_bits is None:
+            raise ValueError(
+                "beta (download refusal) needs size_bits: the switch-free "
+                "base has no eq. 7 term to refuse"
+            )
+        beta = jnp.asarray(beta)
+        size_bits = jnp.where(beta.astype(bool), size_bits, jnp.inf)
+    return prompt_bits, size_bits, work
 
 
 def edge_total_energy(e_trans, e_switch, e_comp):

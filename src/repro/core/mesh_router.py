@@ -78,6 +78,18 @@ drain), and ``outcome.cause`` is derived post-hoc from the scattered
 choices by the shared ``batch_router.rejection_cause`` — bitwise the
 single-device channel.
 
+The eq. 16 action knobs (``RequestBatch.eta`` / ``beta`` /
+``local_flops_per_s``, see ``batch_router.route_batch``) ride the
+buckets the same way — padding rows carry ``eta = 1`` (so the ``+inf``
+prompt pad never multiplies to NaN), ``beta = True`` and a zero local
+rate — and the inner ``_route_core`` applies them per cell untouched.
+The only shared-column consequence is the cloud backlog: a partial
+offload commits ``eta * gen_tokens``, so the window-close replay folds
+the SAME eta-scaled token count (one exact-rounded multiply — bitwise
+the per-cell commit). Downloads (``beta``) never need reconciling: the
+cloud columns are validated full-residency, so every cross-cell model
+fetch lands on a per-cell edge block no other cell can touch.
+
 Neighbour-cell spill (``FleetParams.spill``) breaks the premise of the
 cell-blocked path — a request may commit OUTSIDE its home block — so
 spill fleets take a FULL-REPLICATION variant instead: every device row
@@ -215,6 +227,25 @@ def _bucket_requests(reqs: br.RequestBatch, layout: br.CellLayout,
         dl_b = np.full((c_pad, bc), np.inf, dl.dtype)
         dl_b[sortedb, slot] = dl[order]
 
+    # eq. 16 action columns: padding carries eta = 1 (the +inf prompt
+    # pad must not multiply to NaN), beta = True and a zero local rate
+    # (t_local is where-guarded on local > 0) — all inert
+    eta_b = None
+    if reqs.eta is not None:
+        eta = np.asarray(reqs.eta)
+        eta_b = np.ones((c_pad, bc), eta.dtype)
+        eta_b[sortedb, slot] = eta[order]
+    beta_b = None
+    if reqs.beta is not None:
+        beta = np.asarray(reqs.beta, bool)
+        beta_b = np.ones((c_pad, bc), bool)
+        beta_b[sortedb, slot] = beta[order]
+    loc_b = None
+    if reqs.eta is not None and reqs.local_flops_per_s is not None:
+        loc = np.asarray(reqs.local_flops_per_s)
+        loc_b = np.zeros((c_pad, bc), loc.dtype)
+        loc_b[sortedb, slot] = loc[order]
+
     arr_b = None
     if has_time:
         arr = np.asarray(reqs.arrival_s)
@@ -229,7 +260,8 @@ def _bucket_requests(reqs: br.RequestBatch, layout: br.CellLayout,
         pad_counts[:c] = counts
         padmask = np.arange(bc)[None, :] >= pad_counts[:, None]
         arr_b = np.where(padmask, bmax[:, None], arr_b)
-    return model_b, prompt_b, gen_b, icell_b, arr_b, dl_b, gpos
+    return (model_b, prompt_b, gen_b, icell_b, arr_b, dl_b, eta_b, beta_b,
+            loc_b, gpos)
 
 
 @functools.partial(
@@ -238,7 +270,8 @@ def _bucket_requests(reqs: br.RequestBatch, layout: br.CellLayout,
                      "chunk", "unroll", "backend", "speculative"),
 )
 def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
-                   dl_b, outage, gpos_b, gen_g, arr_g, *, mesh, axis, layout,
+                   dl_b, eta_b, beta_b, loc_b, outage, gpos_b, gen_g, arr_g,
+                   eta_g, *, mesh, axis, layout,
                    c_pad, policy, actor, chunk, unroll, backend, speculative):
     policy_fn = br._resolve_policy(policy, actor)
     c, n, nc = layout.num_cells, layout.per_cell, layout.num_cloud
@@ -248,6 +281,9 @@ def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
     dtype = jnp.result_type(prompt_b, params.uplink_bps)
     has_time = params.drain_rate is not None and arr_b is not None
     has_dl = dl_b is not None
+    has_eta = eta_b is not None
+    has_beta = beta_b is not None
+    has_loc = loc_b is not None
     has_outage = outage is not None
     clock0 = state.clock
     time0 = jnp.asarray(
@@ -287,6 +323,12 @@ def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
         ins.append(arr_b)
     if has_dl:
         ins.append(dl_b)
+    if has_eta:
+        ins.append(eta_b)
+    if has_beta:
+        ins.append(beta_b)
+    if has_loc:
+        ins.append(loc_b)
     if has_outage:
         ins.append(blocks(outage))
     n_shard = len(ins)
@@ -304,6 +346,9 @@ def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
             dr = rest.pop(0) if has_drain else None
             ar = rest.pop(0) if has_time else None
             dl = rest.pop(0) if has_dl else None
+            et = rest.pop(0) if has_eta else None
+            bt = rest.pop(0) if has_beta else None
+            lc = rest.pop(0) if has_loc else None
             og = rest.pop(0) if has_outage else None
             p = br.FleetParams(
                 flops_per_s=fl, uplink_bps=up, backhaul_bps=bh,
@@ -313,7 +358,8 @@ def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
             s = br.FleetState(resident=res, last_use=lu, queue_tokens=q,
                               clock=clk0, time_s=t0)
             r = br.RequestBatch(model=mdl, prompt_bits=pr, gen_tokens=gn,
-                                cell=icl, arrival_s=ar, deadline_s=dl)
+                                cell=icl, arrival_s=ar, deadline_s=dl,
+                                eta=et, beta=bt, local_flops_per_s=lc)
             st, out = br._route_core(p, s, r, None, policy_fn, chunk=chunk,
                                      unroll=unroll, backend=backend,
                                      speculative=speculative, outage=og)
@@ -399,7 +445,12 @@ def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
             qc = qc + jnp.where(cloud_ids == ch_i, g_i, 0.0)
             return (qc, trun), None
 
-        xs = (choice, gen_g.astype(dtype))
+        # a partial offload commits eta * gen_tokens (one exact-rounded
+        # multiply — the same bits every per-cell scan folded)
+        gen_rep = gen_g.astype(dtype)
+        if eta_g is not None:
+            gen_rep = gen_rep * eta_g.astype(dtype)
+        xs = (choice, gen_rep)
         if has_time:
             xs += (arr_g.astype(dtype),)
         (q_cloud, _), _ = jax.lax.scan(
@@ -424,7 +475,8 @@ def _sharded_route(params, state, model_b, prompt_b, gen_b, icell_b, arr_b,
                      "unroll", "backend", "speculative"),
 )
 def _sharded_route_spill(params, state, model_b, prompt_b, gen_b, icell_b,
-                         arr_b, dl_b, outage, gpos_b, model_g, gen_g, arr_g,
+                         arr_b, dl_b, eta_b, beta_b, loc_b, outage, gpos_b,
+                         model_g, gen_g, arr_g, eta_g,
                          *, mesh, axis, c_pad, policy, actor, chunk, unroll,
                          backend, speculative):
     """Full-replication sharded route for spill fleets (module docstring:
@@ -440,6 +492,9 @@ def _sharded_route_spill(params, state, model_b, prompt_b, gen_b, icell_b,
     dtype = jnp.result_type(prompt_b, params.uplink_bps)
     has_time = params.drain_rate is not None and arr_b is not None
     has_dl = dl_b is not None
+    has_eta = eta_b is not None
+    has_beta = beta_b is not None
+    has_loc = loc_b is not None
     has_outage = outage is not None
     clock0 = state.clock
     time0 = jnp.asarray(
@@ -452,6 +507,12 @@ def _sharded_route_spill(params, state, model_b, prompt_b, gen_b, icell_b,
         sharded.append(arr_b)
     if has_dl:
         sharded.append(dl_b)
+    if has_eta:
+        sharded.append(eta_b)
+    if has_beta:
+        sharded.append(beta_b)
+    if has_loc:
+        sharded.append(loc_b)
     n_shard = len(sharded)
     repl = [params, state] + ([outage] if has_outage else [])
 
@@ -465,8 +526,12 @@ def _sharded_route_spill(params, state, model_b, prompt_b, gen_b, icell_b,
             rest = list(rest)
             ar = rest.pop(0) if has_time else None
             dl = rest.pop(0) if has_dl else None
+            et = rest.pop(0) if has_eta else None
+            bt = rest.pop(0) if has_beta else None
+            lc = rest.pop(0) if has_loc else None
             r = br.RequestBatch(model=mdl, prompt_bits=pr, gen_tokens=gn,
-                                cell=icl, arrival_s=ar, deadline_s=dl)
+                                cell=icl, arrival_s=ar, deadline_s=dl,
+                                eta=et, beta=bt, local_flops_per_s=lc)
             _, out = br._route_core(p_full, s_full, r, None, policy_fn,
                                     chunk=chunk, unroll=unroll,
                                     backend=backend, speculative=speculative,
@@ -527,7 +592,12 @@ def _sharded_route_spill(params, state, model_b, prompt_b, gen_b, icell_b,
         queue = queue.at[sel].add(jnp.where(ok, gen_i, 0.0))
         return (resident, last_use, queue, clock, time_s), None
 
-    xs = (model_g, gen_g.astype(dtype), choice)
+    # a partial offload commits eta * gen_tokens — same bits as the
+    # per-cell scans (one exact-rounded multiply, see _sharded_route)
+    gen_rep = gen_g.astype(dtype)
+    if eta_g is not None:
+        gen_rep = gen_rep * eta_g.astype(dtype)
+    xs = (model_g, gen_rep, choice)
     if has_time:
         xs += (arr_g.astype(dtype),)
     carry = (state.resident, state.last_use, queue0, clock0, time0)
@@ -569,8 +639,11 @@ def route_batch_sharded(
     Robustness knobs match ``route_batch``: ``reqs.deadline_s`` (SLO
     admission), ``outage`` ((N,) bool fault mask in the caller's server
     order) and ``params.spill`` — the last switches to the
-    full-replication path (module docstring: robustness knobs).
-    ``outcome.cause`` labels every rejection.
+    full-replication path (module docstring: robustness knobs). The
+    eq. 16 action knobs (``reqs.eta`` / ``beta`` /
+    ``local_flops_per_s``) ride the buckets and the cloud replay folds
+    the eta-scaled commit (module docstring). ``outcome.cause`` labels
+    every rejection.
 
     Mesh selection: pass ``mesh`` (leading axis = the cell axis) or
     ``num_devices`` (a 1-axis ``("cells",)`` mesh over the first that
@@ -630,7 +703,8 @@ def route_batch_sharded(
     time0 = float(np.asarray(state.time_s)) if state.time_s is not None \
         else 0.0
     has_spill = params.spill is not None and params.cell is not None
-    model_b, prompt_b, gen_b, icell_b, arr_b, dl_b, gpos = _bucket_requests(
+    (model_b, prompt_b, gen_b, icell_b, arr_b, dl_b, eta_b, beta_b, loc_b,
+     gpos) = _bucket_requests(
         reqs, layout, c_pad, time0, has_time, keep_cells=has_spill)
 
     route_fn = _sharded_route_spill if has_spill else _sharded_route
@@ -642,11 +716,15 @@ def route_batch_sharded(
         jnp.asarray(icell_b),
         None if arr_b is None else jnp.asarray(arr_b),
         None if dl_b is None else jnp.asarray(dl_b),
+        None if eta_b is None else jnp.asarray(eta_b),
+        None if beta_b is None else jnp.asarray(beta_b),
+        None if loc_b is None else jnp.asarray(loc_b),
         outage,
         jnp.asarray(gpos),
         *first,
         reqs.gen_tokens,
         reqs.arrival_s if has_time else None,
+        reqs.eta,
         mesh=mesh, axis=axis, c_pad=c_pad, policy=policy,
         actor=actor, chunk=chunk, unroll=unroll, backend=backend,
         speculative=speculative, **layout_kw,

@@ -47,6 +47,20 @@ its action space is the env's {local, ES 1..N}, which has no cloud slot.
 The actor's chosen ES maps back to a flat server index; serving always
 places the request, so the ``local`` head is skipped.
 
+Full eq. 16 action space
+------------------------
+The actor's output row is ``[target logits (N+1) | eta | beta]``. The
+in-scan policy resolves the TARGET head live (residency drifts inside a
+window); the continuous ``eta`` (partial-offload ratio, sigmoid as in
+``maddpg._split_heads``) and binary ``beta`` (download decision,
+``sigmoid > 0.5`` as executed by ``maddpg.policy_action``) must be
+priced into the score matrix BEFORE routing, so
+``actor_action_columns`` evaluates them once per window against the
+window-entry residency snapshot and returns ``RequestBatch.eta`` /
+``.beta`` columns. ``route_batch(..., actor=policy)`` plus those
+columns serves the complete eq. 16 action ``(target, eta, beta)`` —
+nothing from the trained head row is discarded anymore.
+
 Checkpoint contract
 -------------------
 ``save_actor_checkpoint`` stores the stacked actor pytree through the
@@ -366,6 +380,67 @@ def make_actor_policy(actor_params, spec: ObsSpec, fleet_params, *,
     return policy
 
 
+def actor_action_columns(actor_params, spec: ObsSpec, fleet_params, state,
+                         reqs, *, agent: int = 0,
+                         defaults: Optional[ObsDefaults] = None,
+                         model_aware: bool = True):
+    """Evaluate the actor's eta/beta heads for one request window.
+
+    The eq. 16 action is ``(target, eta, beta)``; ``make_actor_policy``
+    resolves the target head inside the routing scan, but the offload
+    ratio and the download decision reshape the score matrix itself
+    (eq. 5/9 scaling, eq. 7 gating) and so must be fixed per request
+    BEFORE routing. This evaluates agent ``agent``'s MLP once over the
+    window — same observation bridge as the in-scan policy, residency
+    read from the WINDOW-ENTRY ``state`` — and squashes the two trailing
+    heads exactly as training executes them (``maddpg.policy_action``
+    sans exploration): ``eta = sigmoid``, ``beta = sigmoid(.) > 0.5``,
+    beta forced off for MADDPG-NoModel.
+
+    Returns ``(eta, beta)`` ready for ``RequestBatch``; route with::
+
+        eta, beta = actor_action_columns(params, spec, fp, state, reqs)
+        reqs = reqs._replace(eta=eta, beta=beta)
+        route_batch(fp, state, reqs, policy=actor_policy)
+    """
+    n_fleet = np.asarray(fleet_params.flops_per_s).shape[0]
+    fleet_cell = (
+        fleet_params.cell if fleet_params.cell is not None
+        else np.zeros((n_fleet,), np.int32)
+    )
+    rows, row_cells = cell_index_map(spec, fleet_cell)
+    index_map = jnp.asarray(rows)
+    col_cell = jnp.asarray(row_cells)
+    mlp = _agent_slice(actor_params, agent)
+    dflt = defaults if defaults is not None else default_obs_defaults(spec)
+
+    model = jnp.asarray(reqs.model)
+    cells = jnp.zeros_like(model) if reqs.cell is None else reqs.cell
+    idx = index_map[cells]                                   # (B, N)
+    cell_ok = col_cell[cells] == cells[:, None]              # (B, N)
+    resident = jnp.asarray(state.resident)
+    compat = jnp.take_along_axis(resident.T[model], idx, axis=1) & cell_ok
+    if not model_aware:
+        compat = jnp.zeros_like(compat)
+    flops_tok = jnp.asarray(fleet_params.decode_flops_per_token)[model]
+    row = lambda m, x, r, f, cm: build_obs(
+        spec, model=m, x_bits=x, rho=r, f_es=f, compat=cm,
+        ed_pos=dflt.ed_pos, es_pos=dflt.es_pos, cc_pos=dflt.cc_pos,
+        f_ed=dflt.f_ed,
+    )
+    obs = jax.vmap(row)(
+        model, reqs.prompt_bits,
+        reqs.gen_tokens * flops_tok / reqs.prompt_bits,
+        jnp.asarray(fleet_params.flops_per_s)[idx], compat,
+    )
+    out = networks.mlp_apply(mlp, obs)                       # (B, N+3)
+    eta = jax.nn.sigmoid(out[..., spec.num_ess + 1])
+    beta = jax.nn.sigmoid(out[..., spec.num_ess + 2]) > 0.5
+    if not model_aware:  # download action forced off, as in training
+        beta = jnp.zeros_like(beta)
+    return eta, beta
+
+
 # ---------------------------------------------------------------------------
 # checkpoint round-trip
 # ---------------------------------------------------------------------------
@@ -479,6 +554,12 @@ def drain_corrected_latencies(servers, catalog, requests, choices):
     realized latency. Comparing policies on THIS number is the fair
     fight — on raw eq. 11, greedy is the argmin of the metric itself.
 
+    Requests carrying the eq. 16 knobs replay them: ``eta`` scales the
+    edge share inside ``_candidate_latency`` and the recorded number is
+    the eq. 13 max with the device's retained share (``_local_latency``
+    is 0.0 for knob-free requests, so full-offload streams are priced
+    exactly as before).
+
     ``choices`` must be feasible (no ``-1`` rejections). Returns a float
     list aligned with ``requests``.
     """
@@ -495,6 +576,7 @@ def drain_corrected_latencies(servers, catalog, requests, choices):
             router.advance_time(req.arrival_s)
         srv = router.servers[int(choice)]
         lat = router._candidate_latency(srv, req)
-        corrected.append(router._drain_score(srv, req, lat))
+        corrected.append(max(router._local_latency(req),
+                             router._drain_score(srv, req, lat)))
         router.route(req)
     return corrected

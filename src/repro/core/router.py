@@ -90,6 +90,17 @@ class Request:
     cell: int = 0              # which cell the requesting device sits in
     arrival_s: float | None = None  # wall-clock arrival (None: no time drain)
     deadline_s: float | None = None  # SLO: reject if best score exceeds it
+    #: eq. 16 offload ratio in [0, 1]: the edge side transmits/computes
+    #: the ``eta`` fraction, the device keeps ``1 - eta`` (``None``
+    #: prices like 1.0 — today's full-offload serving — bit-exactly)
+    eta: float | None = None
+    #: eq. 16 download decision: ``False`` refuses the eq. 7 model fetch
+    #: on a residency miss (non-resident candidates price ``+inf``);
+    #: ``None``/``True`` downloads as before
+    beta: bool | None = None
+    #: device compute speed for the eq. 3 local share; ``None`` prices
+    #: the local side at zero (pure edge latency, as before)
+    local_flops_per_s: float | None = None
 
 
 class ModelAwareRouter:
@@ -110,19 +121,39 @@ class ModelAwareRouter:
     # ------------------------------------------------------------------
     def _candidate_latency(self, srv: EdgeServer, req: Request) -> float:
         entry = self.catalog[req.model]
-        t_trans = req.prompt_bits / srv.uplink_bps                  # eq. (5)
+        prompt = req.prompt_bits
+        work = req.gen_tokens * entry.decode_flops_per_token
+        if req.eta is not None:
+            # eq. 16 partial offload: the edge side only sees the eta
+            # fraction of the prompt (eq. 5) and the work (eq. 9); the
+            # (1 - eta) local remainder is priced in ``route`` (it is
+            # per-request, not per-candidate)
+            prompt = prompt * req.eta
+            work = work * req.eta
+        t_trans = prompt / srv.uplink_bps                           # eq. (5)
         if self._spilled(srv, req):
             # neighbour-cell spill surcharge: the prompt crosses the
             # inter-cell backhaul on top of the uplink
-            t_trans = t_trans + req.prompt_bits / srv.backhaul_bps
-        t_switch = (
-            0.0 if req.model in srv.resident
-            else entry.switch_latency(srv.backhaul_bps)             # eq. (7)
-        )
+            t_trans = t_trans + prompt / srv.backhaul_bps
+        if req.model in srv.resident:
+            t_switch = 0.0
+        elif req.beta is not None and not req.beta:
+            # download refusal: a miss cannot be served here at all
+            t_switch = float("inf")
+        else:
+            t_switch = entry.switch_latency(srv.backhaul_bps)       # eq. (7)
         backlog = srv.queue_tokens * entry.decode_flops_per_token
-        work = req.gen_tokens * entry.decode_flops_per_token
         t_comp = (backlog + work) / srv.flops_per_s                 # eq. (9)
         return t_trans + t_switch + t_comp                          # eq. (11)
+
+    def _local_latency(self, req: Request) -> float:
+        """Eq. 3 share the device keeps under partial offload; 0.0 when
+        the eta knob (or the device speed) is absent."""
+        if (req.eta is None or req.local_flops_per_s is None
+                or req.local_flops_per_s <= 0):
+            return 0.0
+        work = req.gen_tokens * self.catalog[req.model].decode_flops_per_token
+        return ((1.0 - req.eta) * work) / req.local_flops_per_s
 
     def _drain_score(self, srv: EdgeServer, req: Request, lat: float) -> float:
         """Drain-aware decision score: swap eq. 9's backlog term for the
@@ -193,30 +224,40 @@ class ModelAwareRouter:
             choice = int(np.argmin(scores))
         else:
             choice = int(np.argmin(lats))
-        best = min(lats)
+        t_local = self._local_latency(req)
+        best = max(t_local, min(lats))  # eq. 13: device and edge overlap
         deadline = float("inf") if req.deadline_s is None \
             else float(req.deadline_s)
         if not np.isfinite(lats[choice]) or best > deadline:
             # reject without mutating any state; the SLO check compares
-            # the BEST score, so it never depends on the policy's pick
-            if np.isfinite(best):
+            # the BEST eq. 13 total, so it never depends on the policy's
+            # pick. The cause is STRUCTURAL — visibility and outage
+            # masks, not score finiteness — so a beta refusal that
+            # leaves every up candidate at +inf still reads as an
+            # admission problem, matching ``batch_router.rejection_cause``
+            visible = [self._visible(s, req) for s in self.servers]
+            if any(v and not s.outaged
+                   for v, s in zip(visible, self.servers)):
                 self.last_cause = CAUSE_ADMISSION
-            elif any(self._visible(s, req) for s in self.servers):
+            elif any(visible):
                 self.last_cause = CAUSE_OUTAGE
             else:
                 self.last_cause = CAUSE_INFEASIBLE
             return -1, float("inf")
         self.last_cause = CAUSE_COMPLETED
         srv = self.servers[choice]
-        # commit: LRU residency + queue
+        # commit: LRU residency + queue. Under a beta refusal a committed
+        # request is always a residency hit (misses priced +inf above),
+        # so the install below is a no-op there by construction.
         if req.model not in srv.resident:
             if len(srv.resident) >= srv.cache_slots:
                 evict = min(srv.resident, key=lambda m: srv.last_use.get(m, -1))
                 srv.resident.remove(evict)
             srv.resident.append(req.model)
         srv.last_use[req.model] = self.clock
-        srv.queue_tokens += req.gen_tokens
-        return choice, lats[choice]
+        gen = req.gen_tokens if req.eta is None else req.gen_tokens * req.eta
+        srv.queue_tokens += gen  # the edge only queues the offloaded share
+        return choice, max(t_local, lats[choice])
 
     def _observe(self, req: Request):
         obs = []

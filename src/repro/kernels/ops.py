@@ -58,7 +58,7 @@ def route_score(
     prompt_bits, size_bits, flops_tok, work,
     uplink_bps, backhaul_bps, flops_per_s,
     queue_tokens=None, resident=None, model=None,
-    req_cell=None, srv_cell=None, spill=None,
+    req_cell=None, srv_cell=None, spill=None, eta=None, beta=None,
     *, cloud_cell: int = -1, backend: str = "xla",
 ):
     """Fused (B, N) eq. 11 routing-score matrix (see ``route_score.py``).
@@ -66,7 +66,10 @@ def route_score(
     Backends: ``"xla"`` (reference contraction), ``"pallas"`` (TPU
     kernel; interpreted when this host is CPU-only), and
     ``"pallas-interpret"`` (force interpret mode — the value the
-    ``REPRO_ROUTER_BACKEND`` env knob uses on CPU CI).
+    ``REPRO_ROUTER_BACKEND`` env knob uses on CPU CI). ``eta``/``beta``
+    are the eq. 16 partial-offload / download-refusal columns; both
+    backends fold them through ``costs.apply_eta_beta`` so the
+    transform (and its ``None`` bitwise no-op) is shared.
     """
     if backend in ("pallas", "pallas-interpret"):
         from repro.kernels import route_score as _k
@@ -76,7 +79,7 @@ def route_score(
             uplink_bps, backhaul_bps, flops_per_s,
             queue_tokens=queue_tokens, resident=resident, model=model,
             req_cell=req_cell, srv_cell=srv_cell, spill=spill,
-            cloud_cell=cloud_cell,
+            eta=eta, beta=beta, cloud_cell=cloud_cell,
             interpret=_INTERPRET or backend == "pallas-interpret",
         )
     return ref.route_score_xla(
@@ -84,5 +87,5 @@ def route_score(
         uplink_bps, backhaul_bps, flops_per_s,
         queue_tokens=queue_tokens, resident=resident, model=model,
         req_cell=req_cell, srv_cell=srv_cell, spill=spill,
-        cloud_cell=cloud_cell,
+        eta=eta, beta=beta, cloud_cell=cloud_cell,
     )

@@ -228,6 +228,7 @@ def route_score_xla(
     uplink_bps, backhaul_bps, flops_per_s,
     queue_tokens=None, resident=None, model=None,
     req_cell=None, srv_cell=None, cloud_cell=-1, spill=None,
+    eta=None, beta=None,
 ):
     """XLA oracle for the fused (B, N) routing-score kernel.
 
@@ -243,9 +244,19 @@ def route_score_xla(
     ``prompt_bits / backhaul_bps`` (the prompt crosses the inter-cell
     backhaul on top of the uplink — the same generalisation the cloud
     column folds into its effective uplink).
+
+    ``eta`` (B,) scales the transmitted prompt and offloaded work (the
+    eq. 16 offload ratio — spilled pairs pay the surcharge on the
+    scaled prompt too); ``beta`` (B,) False refuses the eq. 7 download,
+    poisoning every non-resident pair to ``+inf``. Both transforms
+    happen once at entry via ``costs.apply_eta_beta`` so the kernel
+    wrapper and this reference stay bit-identical.
     """
     from repro.core import costs  # leaf module (jnp-only): no cycle
 
+    prompt_bits, size_bits, work = costs.apply_eta_beta(
+        prompt_bits, size_bits, work, eta, beta
+    )
     res_bn = resident[:, model].T if resident is not None else None
     score = costs.edge_score_matrix(
         prompt_bits, size_bits, flops_tok, work,

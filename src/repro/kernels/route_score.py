@@ -109,7 +109,7 @@ def route_score(
     prompt_bits, size_bits, flops_tok, work,
     uplink_bps, backhaul_bps, flops_per_s,
     queue_tokens=None, resident=None, model=None,
-    req_cell=None, srv_cell=None, spill=None,
+    req_cell=None, srv_cell=None, spill=None, eta=None, beta=None,
     *, cloud_cell: int = -1, block_b: int = 128, block_n: int = 128,
     interpret: bool = False, out_dtype=None,
 ):
@@ -123,7 +123,19 @@ def route_score(
     visibility mask (out-of-cell pairs score ``+inf``); ``spill`` (a
     (C, C) bool adjacency) widens it with backhaul-priced neighbour-cell
     pairs (surcharge ``prompt_bits / backhaul_bps``).
+
+    ``eta`` (B,) scales prompt and work before the strips are packed —
+    ``(x * eta) / r`` is the IEEE grouping of eq. 5/9's ``x eta / r``,
+    so the kernel body needs no eta lane and ``eta=None`` is bitwise
+    today's path. ``beta`` (B,) False poisons ``size_bits`` to ``+inf``:
+    the in-kernel residency gate (a select, never a multiply) still
+    zeroes hits, and every refused miss prices ``+inf``.
     """
+    from repro.core import costs  # leaf module (jnp-only): no cycle
+
+    prompt_bits, size_bits, work = costs.apply_eta_beta(
+        prompt_bits, size_bits, work, eta, beta
+    )
     has_switch = size_bits is not None
     has_resident = has_switch and resident is not None
     has_cells = req_cell is not None and srv_cell is not None

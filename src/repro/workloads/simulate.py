@@ -41,23 +41,35 @@ def request_energy_j(params: br.FleetParams, reqs: br.RequestBatch,
     the ``core.costs`` functions (the single home of the cost
     arithmetic): uplink transmission + model switch (when the request
     missed residency) + edge compute (``kappa * f^2 * work/f``). Zero
-    for rejected requests. The shared metric under
-    ``benchmarks/policy_serving.py`` and the per-window series here."""
+    for rejected requests.
+
+    Under partial offload (``reqs.eta``) the edge side only transmits
+    and computes the ``eta`` fraction, so both the eq. 6 and the eq. 10
+    analogue scale with it — a committed ``beta = False`` request is
+    necessarily a residency hit (refused misses price ``+inf`` and are
+    never chosen), so the eq. 8 hit-gating already covers the download
+    decision. The shared metric under ``benchmarks/policy_serving.py``
+    and the per-window series here."""
     choice = np.asarray(outcome.choice)
     ok = choice >= 0
     ch = np.maximum(choice, 0)
     model = np.asarray(reqs.model)
     flops = np.asarray(params.flops_per_s)[ch]
+    prompt = np.asarray(reqs.prompt_bits)
+    work = (np.asarray(reqs.gen_tokens)
+            * np.asarray(params.decode_flops_per_token)[model])
+    if reqs.eta is not None:  # eq. 16 offload ratio: edge share only
+        eta = np.asarray(reqs.eta)
+        prompt = prompt * eta
+        work = work * eta
     t_trans = costs.trans_latency(
-        np.asarray(reqs.prompt_bits), 1.0, np.asarray(params.uplink_bps)[ch]
+        prompt, 1.0, np.asarray(params.uplink_bps)[ch]
     )
     t_switch = np.where(
         np.asarray(outcome.hit), 0.0,
         costs.switch_latency(np.asarray(params.size_bits)[model],
                              np.asarray(params.backhaul_bps)[ch]),
     )
-    work = (np.asarray(reqs.gen_tokens)
-            * np.asarray(params.decode_flops_per_token)[model])
     e = costs.edge_total_energy(
         costs.trans_energy(p_tx, t_trans),
         costs.switch_energy(p_bh, t_switch),

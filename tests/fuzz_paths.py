@@ -28,6 +28,19 @@ paths must then ALSO agree on the per-request rejection cause, and the
 oracle's ``last_cause`` must match bit for bit. The knobs draw from a
 separate rng stream, so knob-free calls regenerate the exact historical
 scenarios of the seed-pinned tests.
+
+The eq. 16 action knobs fuzz the partial-offload / download-refusal
+semantics on top: ``eta`` is ``False`` (column absent — the bitwise
+no-op contract), ``"zero"`` (everything local: zero edge share) or
+``"mixed"`` (per-request ratios from {0, ¼, ½, ¾, 1} — exactly
+representable in every float width, so the f32 batch columns and the
+f64 oracle see identical values; a per-request local compute rate
+rides along for the eq. 3 term); ``beta`` is ``False``,
+``"download"`` (every miss fetches — identical decisions to today,
+exercised as such), ``"refuse"`` (every miss re-prices resident-only)
+or ``"mixed"``. The eta/beta draws come AFTER the robustness draws on
+the knob rng, so every historical knob combination regenerates bit for
+bit.
 """
 import copy
 
@@ -81,7 +94,8 @@ def _random_scenario(seed, n_cells, per_cell, cloud):
 
 
 def check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk,
-                             deadline=False, spill=False, outage=False):
+                             deadline=False, spill=False, outage=False,
+                             eta=False, beta=False):
     fleet, (models, bits, toks, cells, arrivals) = _random_scenario(
         seed, n_cells, per_cell, cloud
     )
@@ -100,6 +114,18 @@ def check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk,
         cells = np.zeros_like(cells)
     if outage:
         out_mask = knob_rng.random(len(fleet)) < 0.3
+    # eq. 16 action knobs draw AFTER the robustness knobs (module
+    # docstring): historical knob combinations regenerate bit for bit
+    eta_col = loc_col = beta_col = None
+    if eta:  # quarter ratios are exact in f32 AND f64: batch == oracle
+        eta_col = (np.zeros(n) if eta == "zero" else
+                   knob_rng.choice([0.0, 0.25, 0.5, 0.75, 1.0], size=n))
+        loc_col = knob_rng.uniform(5e11, 5e12, n).astype(
+            np.float32).astype(np.float64)
+    if beta:
+        beta_col = {"download": np.ones(n, bool),
+                    "refuse": np.zeros(n, bool)}.get(
+                        beta, knob_rng.random(n) < 0.5)
     params, state0 = br.fleet_from_servers(fleet, CATALOG)
     if spill:
         params = params._replace(spill=jnp.asarray(adj))
@@ -111,6 +137,10 @@ def check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk,
         cell=jnp.asarray(cells, jnp.int32),
         arrival_s=jnp.asarray(arrivals, jnp.float32),
         deadline_s=None if dl is None else jnp.asarray(dl, jnp.float32),
+        eta=None if eta_col is None else jnp.asarray(eta_col, jnp.float32),
+        beta=None if beta_col is None else jnp.asarray(beta_col),
+        local_flops_per_s=(None if loc_col is None
+                           else jnp.asarray(loc_col, jnp.float32)),
     )
     st_scan, out_scan = br.route_batch(params, state0, reqs, policy=policy,
                                        outage=outage_arr)
@@ -171,6 +201,10 @@ def check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk,
             sc_choice.append(router.route(Request(
                 int(m), float(b), int(t), cell=int(c), arrival_s=float(a),
                 deadline_s=None if dl is None else float(dl[i]),
+                eta=None if eta_col is None else float(eta_col[i]),
+                beta=None if beta_col is None else bool(beta_col[i]),
+                local_flops_per_s=(None if loc_col is None
+                                   else float(loc_col[i])),
             ))[0])
             sc_cause.append(router.last_cause)
         np.testing.assert_array_equal(np.asarray(out_scan.choice),

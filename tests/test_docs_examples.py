@@ -193,6 +193,38 @@ def test_readme_links_robustness_guide():
         "README no longer links the robustness guide"
 
 
+def test_serving_md_covers_eq16_action_contract():
+    """The serving guide keeps the full eq. 16 action-contract table:
+    one row per head, the column carriers, and the window-level
+    evaluator for trained actors."""
+    for needle in ("policies.actor_action_columns", "RequestBatch.eta",
+                   "RequestBatch.beta", "local_flops_per_s",
+                   "download_rate"):
+        assert needle in SERVING, \
+            f"docs/serving.md lost the eq. 16 contract piece {needle}"
+    assert "| eq. 16 head |" in SERVING, \
+        "docs/serving.md lost the eq. 16 policy-contract table"
+
+
+def test_paper_map_covers_eq_rows():
+    """paper_map.md keeps one row per printed equation the serving
+    plane prices — including the eq. 1/2 task/model tuples and BOTH
+    eq. 16 rows (observation AND the (target, eta, beta) action)."""
+    paper_map = (REPO / "docs" / "paper_map.md").read_text()
+    for needle in ("| eq. 1 |", "| eq. 2 |", "| eq. 3 |", "| eq. 4 |",
+                   "action `(target, eta, beta)`",
+                   "policies.actor_action_columns"):
+        assert needle in paper_map, \
+            f"docs/paper_map.md lost its {needle} row"
+
+
+def test_ci_covers_policy_serving_smoke():
+    """CI keeps the eq. 16 serving smoke: a toy actor asserting the
+    eta/beta columns are honoured end to end."""
+    ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    assert "--only policy_serving --smoke" in ci
+
+
 def test_ci_covers_degraded_smoke():
     """CI keeps the degraded-service smoke: one tiny fault-injected
     episode asserting admission AND outage rejections end to end."""

@@ -356,3 +356,31 @@ def test_router_paths_agree_robustness_seeded(seed, n_cells, per_cell, cloud,
 
     check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk,
                              deadline=deadline, spill=spill, outage=outage)
+
+
+@pytest.mark.parametrize(
+    "seed,n_cells,per_cell,cloud,policy,chunk,eta,beta,deadline,outage,spill",
+    [
+        (1201, 3, 2, False, "greedy", 16, "mixed", False, False, False,
+         False),
+        (1202, 2, 3, True, "drain", 48, False, "mixed", False, False, False),
+        (1203, 3, 1, False, "greedy", 16, "zero", "refuse", True, False,
+         False),
+        (1204, 2, 2, True, "drain", 16, "mixed", "mixed", False, True,
+         False),
+        (1205, 4, 2, False, "load", 48, "mixed", "download", True, False,
+         True),
+    ])
+def test_router_paths_agree_eta_beta_seeded(seed, n_cells, per_cell, cloud,
+                                            policy, chunk, eta, beta,
+                                            deadline, outage, spill):
+    """Seed-pinned twin of the hypothesis sweep's eq. 16 action knobs:
+    partial-offload eta columns and download-refusal beta columns (plus
+    their interactions with the robustness knobs) through every router
+    path — scan, chunked, speculative, mesh-sharded — against the
+    scalar oracle."""
+    from fuzz_paths import check_router_paths_agree
+
+    check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk,
+                             deadline=deadline, spill=spill, outage=outage,
+                             eta=eta, beta=beta)

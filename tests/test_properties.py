@@ -99,13 +99,16 @@ def test_ssd_chunked_equals_recurrent(s, h, seed):
     deadline=st.booleans(),
     spill=st.booleans(),
     outage=st.booleans(),
+    eta=st.sampled_from([False, "zero", "mixed"]),
+    beta=st.sampled_from([False, "download", "refuse", "mixed"]),
 )
 @settings(max_examples=8, deadline=None)
 def test_all_router_paths_agree(seed, n_cells, per_cell, cloud, policy,
-                                chunk, deadline, spill, outage):
+                                chunk, deadline, spill, outage, eta, beta):
     """Random fleets/streams/policies — optionally under a mixed-SLO
-    deadline column, a random neighbour-cell spill adjacency and a
-    random server-outage mask: scan, chunked, speculative and
+    deadline column, a random neighbour-cell spill adjacency, a random
+    server-outage mask and the eq. 16 action knobs (partial-offload
+    eta ratios, download-refusal beta): scan, chunked, speculative and
     mesh-sharded ``route_batch`` agree with each other (sharded
     bitwise, rejection causes included) and with the scalar oracle. The
     same driver runs seed-pinned in ``test_mesh_router.py`` for
@@ -113,7 +116,8 @@ def test_all_router_paths_agree(seed, n_cells, per_cell, cloud, policy,
     from fuzz_paths import check_router_paths_agree
 
     check_router_paths_agree(seed, n_cells, per_cell, cloud, policy, chunk,
-                             deadline=deadline, spill=spill, outage=outage)
+                             deadline=deadline, spill=spill, outage=outage,
+                             eta=eta, beta=beta)
 
 
 @given(

@@ -139,6 +139,38 @@ def test_stats_per_cause_rates_sum_to_one():
     assert 0.0 < s["admission_rate"] < 1.0
 
 
+def test_stats_download_rate_complements_hit_rate():
+    """``download_rate`` is the completed-denominator complement of
+    ``residency_hit_rate`` — the identity survives alongside the
+    per-cause channels (which use the full-batch denominator), and
+    under blanket ``beta = False`` refusal it is structurally 0: a
+    committed refusal is necessarily a residency hit."""
+    params, state0 = br.fleet_from_servers(
+        [_server(resident=(0,), drain_rate=0.0)], CATALOG)
+    dl = np.where(np.arange(24) % 3 == 0, 1e-6, np.inf)
+    _, out = br.route_batch(params, state0, _batch(deadline_s=dl))
+    s = br.stats(out)
+    assert 0.0 < s["completion_rate"] < 1.0         # mixed outcome batch
+    assert s["residency_hit_rate"] + s["download_rate"] \
+        == pytest.approx(1.0)
+    assert s["download_rate"] > 0.0                 # misses did download
+    # the cause channels still close over the OTHER denominator
+    assert (s["completion_rate"] + s["infeasible_rate"]
+            + s["admission_rate"] + s["outage_rate"]) == pytest.approx(1.0)
+    # per-window view agrees with the whole-batch identity
+    ws = br.window_stats(out, np.arange(24) // 12, 2)
+    done = ws["completion_rate"] > 0
+    np.testing.assert_allclose(
+        (ws["residency_hit_rate"] + ws["download_rate"])[done], 1.0)
+    # blanket refusal: every completed request is a hit, downloads are 0
+    _, ref = br.route_batch(params, state0,
+                            _batch()._replace(beta=jnp.zeros(24, bool)))
+    sr = br.stats(ref)
+    assert sr["completion_rate"] > 0.0
+    assert sr["residency_hit_rate"] == 1.0
+    assert sr["download_rate"] == 0.0
+
+
 def test_batch_outage_mask_excludes_server():
     params, state0 = br.fleet_from_servers(
         [_server(), _server("es1")], CATALOG)

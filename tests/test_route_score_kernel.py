@@ -135,6 +135,88 @@ def test_ungated_when_resident_absent():
     assert (ungated > gated).any()  # some pair actually was resident
 
 
+@pytest.mark.parametrize("b,n,k", [(5, 3, 4), (130, 33, 5)])
+def test_kernel_eta_scales_base(b, n, k):
+    """eq. 16 eta scales the eq. 5/9 terms in kernel and reference
+    alike; eta of ones is BITWISE the knob-absent call (the pre-scale
+    multiplies by 1.0 — an IEEE identity)."""
+    rng = np.random.default_rng(b + n)
+    args = _random_case(rng, b, n, k, jnp.float32)
+    eta = jnp.asarray(
+        rng.choice([0.0, 0.25, 0.5, 0.75, 1.0], size=b), jnp.float32)
+    expect = np.asarray(ref.route_score_xla(**args, eta=eta))
+    got = np.asarray(route_score(**args, eta=eta, interpret=True))
+    np.testing.assert_allclose(got, expect, rtol=1e-6)
+    # eta scales ONLY the eq. 5 prompt and the eq. 9 new-work term; the
+    # switch price and the queue backlog stay fixed, so the score is
+    # affine in eta: score(eta) == score(0) + eta * (score(1) - score(0))
+    base = np.asarray(ref.route_score_xla(**args))
+    fixed = np.asarray(ref.route_score_xla(
+        **args, eta=jnp.zeros(b, jnp.float32)))
+    e = np.asarray(eta)[:, None]
+    np.testing.assert_allclose(expect, fixed + e * (base - fixed),
+                               rtol=1e-5)
+    for backend_fn in (ref.route_score_xla,
+                       lambda **kw: route_score(**kw, interpret=True)):
+        ones = np.asarray(backend_fn(**args, eta=jnp.ones(b, jnp.float32)))
+        absent = np.asarray(backend_fn(**args))
+        np.testing.assert_array_equal(ones, absent)
+
+
+@pytest.mark.parametrize("b,n,k", [(7, 5, 4), (130, 33, 5)])
+def test_kernel_beta_refusal_masks_misses(b, n, k):
+    """beta = False prices every NON-resident pair +inf (the residency
+    gate is a select, so hits keep their finite score untouched);
+    all-True beta is BITWISE the knob-absent call."""
+    rng = np.random.default_rng(3 * b + n)
+    args = _random_case(rng, b, n, k, jnp.float32)
+    beta = jnp.asarray(rng.random(b) < 0.5)
+    expect = np.asarray(ref.route_score_xla(**args, beta=beta))
+    got = np.asarray(route_score(**args, beta=beta, interpret=True))
+    np.testing.assert_array_equal(np.isinf(got), np.isinf(expect))
+    fin = np.isfinite(expect)
+    np.testing.assert_allclose(got[fin], expect[fin], rtol=1e-6)
+    res = np.asarray(args["resident"])[
+        :, np.asarray(args["model"])].T            # (B, N) hit map
+    refused = ~np.asarray(beta)[:, None] & ~res
+    np.testing.assert_array_equal(np.isinf(expect), refused)
+    base = np.asarray(ref.route_score_xla(**args))
+    np.testing.assert_array_equal(expect[~refused], base[~refused])
+    for backend_fn in (ref.route_score_xla,
+                       lambda **kw: route_score(**kw, interpret=True)):
+        always = np.asarray(backend_fn(**args, beta=jnp.ones(b, bool)))
+        absent = np.asarray(backend_fn(**args))
+        np.testing.assert_array_equal(always, absent)
+
+
+def test_beta_without_size_bits_raises():
+    """The switch-free base has no eq. 7 term to refuse."""
+    rng = np.random.default_rng(5)
+    args = _random_case(rng, 9, 4, 4, jnp.float32)
+    args["size_bits"] = None
+    with pytest.raises(ValueError, match="beta"):
+        ref.route_score_xla(**args, beta=jnp.ones(9, bool))
+    with pytest.raises(ValueError, match="beta"):
+        route_score(**args, beta=jnp.ones(9, bool), interpret=True)
+
+
+def test_eta_beta_ragged_shapes_combined():
+    """Both knobs together on a ragged (B, N, K) grid, with cells."""
+    rng = np.random.default_rng(29)
+    args = _random_case(rng, 257, 17, 9, jnp.float32, cells=3)
+    eta = jnp.asarray(
+        rng.choice([0.25, 0.5, 1.0], size=257), jnp.float32)
+    beta = jnp.asarray(rng.random(257) < 0.5)
+    expect = np.asarray(ref.route_score_xla(**args, eta=eta, beta=beta))
+    got = np.asarray(route_score(**args, eta=eta, beta=beta,
+                                 interpret=True))
+    assert got.shape == (257, 17)
+    np.testing.assert_array_equal(np.isinf(got), np.isinf(expect))
+    fin = np.isfinite(expect)
+    assert fin.any() and not fin.all()
+    np.testing.assert_allclose(got[fin], expect[fin], rtol=1e-6)
+
+
 def test_custom_block_shapes():
     """Tile sizes are knobs; odd blocks still reproduce the reference."""
     rng = np.random.default_rng(17)
